@@ -1,0 +1,48 @@
+"""Beyond-paper experiment: the FIFO-ordered GPU server the paper proposes
+as future work ("we leave the extension of the GPU server with FIFO
+ordering as part of future work", §6.3/Fig 15 discussion).
+
+Question: does a FIFO server close the gap to FMLP+ in the homogeneous-
+period regime where FMLP+ beats the priority server (Fig 15), while
+keeping the server's no-busy-wait advantage?
+
+Sweeps T_min with T_max = 500 ms, comparing: priority server (paper),
+FIFO server (this extension, analyzed with the FIFO double bound),
+FMLP+ (sync baseline).
+"""
+
+from __future__ import annotations
+
+import random
+
+from repro.core import fmlp_analysis, server_analysis
+from repro.core.allocation import allocate
+from repro.core.taskset_gen import GenParams, generate_taskset
+
+from .sched_common import num_tasksets
+
+
+def run(full: bool = False) -> list[str]:
+    n_sets = num_tasksets(full)
+    rows = [f"# fig16_fifo_server (beyond paper): % schedulable, {n_sets}/pt"]
+    rows.append("fig16_fifo_server,N_P,tmin_ms,server_prio,server_fifo,fmlp")
+    for np_ in (4, 8):
+        for tmin in (20, 40, 80, 160, 320):
+            rng = random.Random(hash(("fig16", np_, tmin)) & 0xFFFF)
+            params = GenParams(num_cores=np_, period_ms=(tmin, 500.0))
+            wins = {"prio": 0, "fifo": 0, "fmlp": 0}
+            for _ in range(n_sets):
+                tasks = generate_taskset(params, rng)
+                server_sys = allocate(tasks, np_, approach="server",
+                                      epsilon=params.epsilon_ms)
+                wins["prio"] += server_analysis.analyze(server_sys).schedulable
+                wins["fifo"] += server_analysis.analyze_fifo_server(
+                    server_sys).schedulable
+                sync_sys = allocate(tasks, np_, approach="sync")
+                wins["fmlp"] += fmlp_analysis.analyze(sync_sys).schedulable
+            rows.append(
+                f"fig16_fifo_server,{np_},{tmin},"
+                f"{100.0 * wins['prio'] / n_sets:.1f},"
+                f"{100.0 * wins['fifo'] / n_sets:.1f},"
+                f"{100.0 * wins['fmlp'] / n_sets:.1f}")
+    return rows

@@ -1,0 +1,104 @@
+"""Paper Figures 8-15: schedulability experiments (one function per figure).
+
+Every figure reproduces the corresponding sweep in §6.3 using the Table-2
+base parameters.  Expected qualitative outcomes (the paper's claims):
+
+  fig8  : server > {mpcp, fmlp} as GPU segment length ratio grows
+  fig9  : server >> baselines as % of GPU-using tasks grows (paper: up to
+          +38% vs MPCP, +27% vs FMLP+ at 70%, N_P=4)
+  fig10 : server advantage grows with task count (esp. N_P=8)
+  fig11 : server advantage grows with #GPU segments per task
+  fig12 : all approaches degrade as the share of large tasks grows
+  fig13 : server degrades as eps grows; baselines flat
+  fig14 : server degrades as misc ratio grows; crossover vs FMLP+ around
+          ~60% (N_P=4) / ~90% (N_P=8)
+  fig15 : FIFO (FMLP+) overtakes the priority-ordered server for large
+          T_min (paper: ~80ms at N_P=4, ~160ms at N_P=8)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.taskset_gen import GenParams
+
+from .sched_common import sweep
+
+BASE = GenParams()
+
+
+def fig08_gpu_segment_ratio(full: bool) -> list[str]:
+    def mutate(p: GenParams, x: float) -> GenParams:
+        return dataclasses.replace(p, gpu_ratio=(x - 0.05, x + 0.05))
+
+    return sweep("fig08_gpu_seg_ratio", BASE, [0.1, 0.2, 0.3, 0.4, 0.6, 0.8, 1.0],
+                 mutate, full=full)
+
+
+def fig09_pct_gpu_tasks(full: bool) -> list[str]:
+    def mutate(p: GenParams, x: float) -> GenParams:
+        return dataclasses.replace(p, pct_gpu_tasks=(x, x))
+
+    return sweep("fig09_pct_gpu_tasks", BASE,
+                 [0.0, 0.1, 0.3, 0.5, 0.7, 0.9, 1.0], mutate, full=full)
+
+
+def fig10_num_tasks(full: bool) -> list[str]:
+    def mutate(p: GenParams, x: int) -> GenParams:
+        n = x * p.num_cores
+        return dataclasses.replace(p, num_tasks=(n, n))
+
+    # x = tasks per core
+    return sweep("fig10_num_tasks", BASE, [2, 3, 4, 5, 6], mutate, full=full)
+
+
+def fig11_num_gpu_segments(full: bool) -> list[str]:
+    def mutate(p: GenParams, x: int) -> GenParams:
+        return dataclasses.replace(p, num_segments=(x, x))
+
+    return sweep("fig11_num_gpu_segments", BASE, [1, 2, 3, 4, 6, 8], mutate, full=full)
+
+
+def fig12_bimodal(full: bool) -> list[str]:
+    def mutate(p: GenParams, x: float) -> GenParams:
+        return dataclasses.replace(p, bimodal_large_fraction=x)
+
+    # x = fraction of "large" tasks (paper sweeps small:large ratio)
+    return sweep("fig12_bimodal", BASE, [0.0, 0.1, 0.25, 0.5, 0.75, 1.0],
+                 mutate, full=full)
+
+
+def fig13_server_overhead(full: bool) -> list[str]:
+    def mutate(p: GenParams, x: float) -> GenParams:
+        return dataclasses.replace(p, epsilon_ms=x)
+
+    # eps in ms: 50us (base) up to 5ms (far beyond practical)
+    return sweep("fig13_server_overhead", BASE, [0.0, 0.05, 0.5, 1.0, 2.0, 5.0],
+                 mutate, full=full)
+
+
+def fig14_misc_ratio(full: bool) -> list[str]:
+    def mutate(p: GenParams, x: float) -> GenParams:
+        return dataclasses.replace(p, misc_ratio=(x, x))
+
+    return sweep("fig14_misc_ratio", BASE,
+                 [0.1, 0.2, 0.4, 0.6, 0.8, 0.9], mutate, full=full)
+
+
+def fig15_min_period(full: bool) -> list[str]:
+    def mutate(p: GenParams, x: float) -> GenParams:
+        return dataclasses.replace(p, period_ms=(x, 500.0))
+
+    return sweep("fig15_min_period", BASE, [20, 40, 80, 160, 320], mutate, full=full)
+
+
+ALL_FIGURES = [
+    fig08_gpu_segment_ratio,
+    fig09_pct_gpu_tasks,
+    fig10_num_tasks,
+    fig11_num_gpu_segments,
+    fig12_bimodal,
+    fig13_server_overhead,
+    fig14_misc_ratio,
+    fig15_min_period,
+]

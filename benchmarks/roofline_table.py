@@ -1,0 +1,44 @@
+"""Roofline table: reads the dry-run artifacts produced by
+``repro.launch.dryrun`` and prints the three roofline terms per
+(architecture x shape) on the single-pod mesh.
+
+Run ``PYTHONPATH=src python -m repro.launch.dryrun --all`` first; artifacts
+land in ``artifacts/dryrun/*.json``.
+"""
+
+from __future__ import annotations
+
+import json
+import pathlib
+
+ARTIFACTS = pathlib.Path(__file__).resolve().parent.parent / "artifacts" / "dryrun"
+
+
+def run(full: bool = False) -> list[str]:
+    rows = ["# roofline_table: terms in ms per step (single-pod 16x16 mesh)"]
+    rows.append(
+        "roofline,arch,shape,compute_ms,memory_ms,collective_ms,bottleneck,"
+        "model_flops_ratio,roofline_fraction"
+    )
+    files = sorted(ARTIFACTS.glob("*.json")) if ARTIFACTS.exists() else []
+    if not files:
+        rows.append("roofline,SKIP,no dry-run artifacts found; run repro.launch.dryrun,,,,,,")
+        return rows
+    for f in files:
+        d = json.loads(f.read_text())
+        if d.get("mesh") != "single_pod":
+            continue
+        r = d.get("roofline", {})
+        if not r:
+            continue
+        variant = d.get("variant", "baseline")
+        shape = d["shape"] if variant == "baseline" else f"{d['shape']}[{variant}]"
+        rows.append(
+            "roofline,{arch},{shape},{c:.3f},{m:.3f},{k:.3f},{b},{mr:.3f},{rf:.3f}".format(
+                arch=d["arch"], shape=shape,
+                c=r["compute_ms"], m=r["memory_ms"], k=r["collective_ms"],
+                b=r["bottleneck"], mr=r.get("model_flops_ratio", 0.0),
+                rf=r.get("roofline_fraction", 0.0),
+            )
+        )
+    return rows

@@ -1,0 +1,59 @@
+"""Benchmark harness: one entry per paper table/figure, plus the roofline
+table from the multi-pod dry-run artifacts.
+
+Usage:
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME[,NAME...]]
+
+Output: CSV rows on stdout (also mirrored into bench_output.txt by the
+top-level run command).  --full uses the paper's 10,000 tasksets per point.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def _registry():
+    from . import case_study, fig16_fifo_server, overheads, roofline_table
+    from .figures import ALL_FIGURES
+
+    entries: dict[str, object] = {f.__name__: f for f in ALL_FIGURES}
+    entries["fig16_fifo_server"] = fig16_fifo_server.run
+    entries["case_study"] = case_study.run
+    entries["overheads"] = overheads.run
+    entries["roofline_table"] = roofline_table.run
+    return entries
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true",
+                    help="paper-scale: 10,000 tasksets per point")
+    ap.add_argument("--only", type=str, default="",
+                    help="comma-separated benchmark names")
+    args = ap.parse_args()
+
+    entries = _registry()
+    names = [n for n in args.only.split(",") if n] or list(entries)
+    unknown = [n for n in names if n not in entries]
+    if unknown:
+        sys.exit(f"unknown benchmarks: {unknown}; available: {list(entries)}")
+
+    for name in names:
+        t0 = time.perf_counter()
+        try:
+            rows = entries[name](args.full)
+        except Exception as e:  # noqa: BLE001 - keep the harness running
+            print(f"{name},ERROR,{type(e).__name__}: {e}")
+            continue
+        for row in rows:
+            print(row)
+        dt = time.perf_counter() - t0
+        print(f"# {name} took {dt:.1f}s")
+        sys.stdout.flush()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,77 @@
+"""Shared engine for the schedulability experiments (paper §6.3).
+
+Each figure sweeps one generator parameter and reports the percentage of
+schedulable tasksets under: the server-based approach (this paper), MPCP and
+FMLP+ (synchronization-based baselines).  The paper uses 10,000 tasksets per
+point; the default here is smaller for wall-clock reasons (set
+REPRO_BENCH_TASKSETS or --full to raise it).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import random
+from dataclasses import dataclass
+
+from repro.core import fmlp_analysis, mpcp_analysis, server_analysis
+from repro.core.allocation import allocate
+from repro.core.taskset_gen import GenParams, generate_taskset
+
+APPROACHES = ("server", "mpcp", "fmlp")
+
+
+def num_tasksets(full: bool) -> int:
+    env = os.environ.get("REPRO_BENCH_TASKSETS")
+    if env:
+        return int(env)
+    return 10_000 if full else 300
+
+
+@dataclass
+class Point:
+    x: float | str
+    num_cores: int
+    sched_pct: dict[str, float]  # approach -> % schedulable
+
+
+def sched_pct(params: GenParams, n_sets: int, seed: int = 0) -> dict[str, float]:
+    rng = random.Random(seed)
+    wins = {a: 0 for a in APPROACHES}
+    for _ in range(n_sets):
+        tasks = generate_taskset(params, rng)
+        sync_sys = allocate(tasks, params.num_cores, approach="sync")
+        if mpcp_analysis.analyze(sync_sys).schedulable:
+            wins["mpcp"] += 1
+        if fmlp_analysis.analyze(sync_sys).schedulable:
+            wins["fmlp"] += 1
+        server_sys = allocate(
+            tasks, params.num_cores, approach="server", epsilon=params.epsilon_ms
+        )
+        if server_analysis.analyze(server_sys).schedulable:
+            wins["server"] += 1
+    return {a: 100.0 * wins[a] / n_sets for a in APPROACHES}
+
+
+def sweep(
+    name: str,
+    base: GenParams,
+    xs: list,
+    mutate,
+    *,
+    full: bool,
+    cores=(4, 8),
+) -> list[str]:
+    """Run one figure's sweep.  ``mutate(params, x) -> GenParams`` applies the
+    swept value.  Returns CSV rows: fig,N_P,x,server,mpcp,fmlp."""
+    n_sets = num_tasksets(full)
+    rows = [f"# {name}: % schedulable tasksets, {n_sets} tasksets/point"]
+    rows.append(f"{name},N_P,x,server,mpcp,fmlp")
+    for np_ in cores:
+        for x in xs:
+            params = mutate(dataclasses.replace(base, num_cores=np_), x)
+            pct = sched_pct(params, n_sets, seed=hash((name, np_, repr(x))) & 0xFFFF)
+            rows.append(
+                f"{name},{np_},{x},{pct['server']:.1f},{pct['mpcp']:.1f},{pct['fmlp']:.1f}"
+            )
+    return rows

@@ -1,0 +1,24 @@
+"""Core layer: the paper's contribution.
+
+  * task_model       — τ_i = (C,T,D,G,η) with (G^e, G^m) segments (§3)
+  * server_analysis  — the server-based schedulability analysis (§5.2)
+  * mpcp_analysis    — synchronization-based baseline, MPCP (§4, §6.3)
+  * fmlp_analysis    — synchronization-based baseline, FMLP+ (§6.3)
+  * taskset_gen      — Table-2 random taskset generator
+  * allocation       — WFD/FFD/BFD packing with the GPU server (§5.3, Eq 8)
+  * simulator        — discrete-event ground truth for all three protocols
+  * server_runtime   — executable server (threads; used by repro.serving)
+  * admission        — analysis-driven admission control (beyond paper)
+"""
+
+from . import (  # noqa: F401
+    admission,
+    allocation,
+    fmlp_analysis,
+    mpcp_analysis,
+    server_analysis,
+    simulator,
+    taskset_gen,
+)
+from .server_runtime import AcceleratorServer, Request  # noqa: F401
+from .task_model import GpuSegment, System, Task, server_utilization  # noqa: F401

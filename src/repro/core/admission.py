@@ -1,0 +1,111 @@
+"""Analysis-driven admission control (beyond-paper, built from the paper's
+analysis).
+
+A serving deployment declares each workload stream as a sporadic task
+(period, deadline, CPU-side cost, device-segment costs).  A new stream is
+admitted iff the server-based analysis (Eqs (1)-(6)) proves every admitted
+stream still meets its deadline.  This turns the paper's offline
+schedulability test into an online admission test — the GPU server has
+central knowledge of all requests (paper §7 notes this enables exactly this
+kind of feature).
+
+Streams are allocated to cores (and, across pods, to per-pod servers) with
+the paper's WFD-with-server packing (§5.3).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from . import server_analysis
+from .allocation import allocate
+from .task_model import Task
+from .taskset_gen import assign_rm_priorities
+
+__all__ = ["AdmissionController", "AdmissionDecision"]
+
+
+@dataclass
+class AdmissionDecision:
+    admitted: bool
+    reason: str = ""
+    response_times: dict[str, float] = field(default_factory=dict)
+
+
+class AdmissionController:
+    """Holds the currently-admitted stream set for one accelerator (pod)."""
+
+    def __init__(self, num_cores: int, *, epsilon_ms: float = 0.05, heuristic: str = "wfd"):
+        self.num_cores = num_cores
+        self.epsilon = epsilon_ms
+        self.heuristic = heuristic
+        self.streams: list[Task] = []
+
+    def _check(self, tasks: list[Task]) -> AdmissionDecision:
+        tasks = assign_rm_priorities(tasks)
+        system = allocate(
+            tasks,
+            self.num_cores,
+            approach="server",
+            epsilon=self.epsilon,
+            heuristic=self.heuristic,
+        )
+        res = server_analysis.analyze(system)
+        if res.schedulable:
+            return AdmissionDecision(True, "schedulable", res.response_times)
+        misses = [n for n, w in res.response_times.items() if not w <= _deadline(tasks, n)]
+        return AdmissionDecision(False, f"deadline miss for {misses}", res.response_times)
+
+    def try_admit(self, stream: Task) -> AdmissionDecision:
+        if any(t.name == stream.name for t in self.streams):
+            return AdmissionDecision(False, f"duplicate stream name {stream.name!r}")
+        decision = self._check([*self.streams, stream])
+        if decision.admitted:
+            self.streams.append(stream)
+        return decision
+
+    def remove(self, name: str) -> None:
+        self.streams = [t for t in self.streams if t.name != name]
+
+    def utilization(self) -> float:
+        return sum(t.U for t in self.streams)
+
+
+def _deadline(tasks: list[Task], name: str) -> float:
+    for t in tasks:
+        if t.name == name:
+            return t.D
+    return float("inf")
+
+
+class MultiPodAdmission:
+    """Beyond-paper (§7 future work): one GPU server per pod/accelerator;
+    new streams are placed on the pod where they fit, by worst-fit on
+    accelerator utilization (the paper's own WFD discipline, applied at the
+    pod level)."""
+
+    def __init__(self, num_pods: int, *, cores_per_pod: int = 2,
+                 epsilon_ms: float = 0.05):
+        self.pods = [AdmissionController(cores_per_pod, epsilon_ms=epsilon_ms)
+                     for _ in range(num_pods)]
+        self.placement: dict[str, int] = {}
+
+    def gpu_utilization(self, pod: int) -> float:
+        return sum(t.G / t.T for t in self.pods[pod].streams)
+
+    def try_admit(self, stream: Task) -> tuple[AdmissionDecision, int]:
+        """Try pods in worst-fit (emptiest accelerator first) order."""
+        order = sorted(range(len(self.pods)), key=self.gpu_utilization)
+        last = AdmissionDecision(False, "no pods")
+        for p in order:
+            decision = self.pods[p].try_admit(stream)
+            if decision.admitted:
+                self.placement[stream.name] = p
+                return decision, p
+            last = decision
+        return last, -1
+
+    def remove(self, name: str) -> None:
+        pod = self.placement.pop(name, None)
+        if pod is not None:
+            self.pods[pod].remove(name)

@@ -1,0 +1,87 @@
+"""Task allocation (paper §5.3): bin-packing heuristics with the GPU server.
+
+Under partitioned scheduling the allocation problem is bin-packing
+(NP-complete), so the paper uses decreasing-utilization heuristics.  Under
+the server-based approach the GPU server is a first-class schedulable entity
+whose utilization is Eq (8):
+
+    U_server = sum_{tau_i : eta_i > 0} (G_i^m + 2 eta_i eps) / T_i
+
+and it is sorted/allocated together with regular tasks (the paper's
+experiments use worst-fit decreasing, WFD).
+
+Packing utilizations reflect where CPU demand actually lands:
+  * sync approach   : task occupies (C_i + G_i)/T_i on its own core
+                      (busy-wait through the whole GPU segment).
+  * server approach : task occupies C_i/T_i; the server pseudo-task carries
+                      U_server (Eq (8)) onto whichever core it is packed.
+"""
+
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass
+
+from .task_model import System, Task, server_utilization
+
+__all__ = ["allocate", "AllocationError"]
+
+SERVER_NAME = "__gpu_server__"
+
+
+class AllocationError(RuntimeError):
+    pass
+
+
+def _pack(items: list[tuple[str, float]], num_cores: int, heuristic: str) -> dict[str, int]:
+    """Pack (name, util) items onto cores.  Returns name -> core."""
+    items = sorted(items, key=lambda kv: -kv[1])  # decreasing utilization
+    load = [0.0] * num_cores
+    out: dict[str, int] = {}
+    for name, u in items:
+        if heuristic == "wfd":  # worst-fit: emptiest core
+            core = min(range(num_cores), key=lambda c: load[c])
+        elif heuristic == "ffd":  # first-fit: first core that stays <= 1
+            core = next((c for c in range(num_cores) if load[c] + u <= 1.0 + 1e-12), None)
+            if core is None:
+                core = min(range(num_cores), key=lambda c: load[c])
+        elif heuristic == "bfd":  # best-fit: fullest core that still fits
+            fits = [c for c in range(num_cores) if load[c] + u <= 1.0 + 1e-12]
+            core = max(fits, key=lambda c: load[c]) if fits else min(
+                range(num_cores), key=lambda c: load[c]
+            )
+        else:
+            raise ValueError(f"unknown heuristic {heuristic!r}")
+        load[core] += u
+        out[name] = core
+    return out
+
+
+def allocate(
+    tasks: list[Task],
+    num_cores: int,
+    *,
+    approach: str,
+    epsilon: float = 0.0,
+    heuristic: str = "wfd",
+) -> System:
+    """Allocate tasks (and, for the server-based approach, the GPU server) to
+    cores and return the resulting ``System``."""
+    if approach == "sync":
+        items = [(t.name, (t.C + t.G) / t.T) for t in tasks]
+        placement = _pack(items, num_cores, heuristic)
+        placed = [t.with_core(placement[t.name]) for t in tasks]
+        return System(tasks=placed, num_cores=num_cores, epsilon=0.0, server_core=-1)
+    if approach == "server":
+        items = [(t.name, t.C / t.T) for t in tasks]
+        u_server = server_utilization(tasks, epsilon)
+        items.append((SERVER_NAME, u_server))
+        placement = _pack(items, num_cores, heuristic)
+        placed = [t.with_core(placement[t.name]) for t in tasks]
+        return System(
+            tasks=placed,
+            num_cores=num_cores,
+            epsilon=epsilon,
+            server_core=placement[SERVER_NAME],
+        )
+    raise ValueError(f"unknown approach {approach!r}")

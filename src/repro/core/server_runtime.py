@@ -1,0 +1,162 @@
+"""Executable accelerator-server runtime (the paper's §5.1, with real threads).
+
+This is the mechanism the serving engine builds on: a dedicated server thread
+owns the accelerator; clients submit requests and *suspend* (wait on an
+event/future) instead of busy-waiting; the server dequeues requests in task-
+priority order, executes them one at a time (the accelerator is
+non-preemptive: one XLA execution at a time), and notifies the client on
+completion.
+
+The request's "GPU segment" is an arbitrary callable.  For JAX use, the
+callable typically performs an async dispatch plus a blocking wait
+(``jax.block_until_ready``) — the *server* thread blocks (suspends in OS
+terms) while the device computes, exactly like the paper's server calling
+``clFinish()``.  Client threads never touch the device.
+
+Beyond-paper extensions (used by serving; each is off by default):
+  * FIFO ordering mode (the paper's own future-work suggestion, which its
+    Fig. 15 identifies as preferable when periods are similar).
+  * deadline-aware ordering (EDF on absolute deadlines) for straggler
+    mitigation in serving.
+  * per-request timing stats, so epsilon can be *measured* (overheads
+    benchmark mirrors the paper's §6.2).
+"""
+
+from __future__ import annotations
+
+import heapq
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+__all__ = ["AcceleratorServer", "Request", "ServerStats"]
+
+
+@dataclass(order=False)
+class Request:
+    """One accelerator request (a GPU access segment)."""
+
+    fn: Callable[[], Any]
+    priority: int = 0  # larger = higher priority
+    deadline: float | None = None  # absolute (time.monotonic) deadline, for EDF
+    name: str = ""
+    # filled by the server:
+    result: Any = None
+    error: BaseException | None = None
+    submit_t: float = 0.0
+    start_t: float = 0.0
+    end_t: float = 0.0
+    _done: threading.Event = field(default_factory=threading.Event, repr=False)
+
+    def wait(self, timeout: float | None = None) -> Any:
+        """Suspend the caller until the request completes (no busy-wait)."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.name!r} not done within {timeout}s")
+        if self.error is not None:
+            raise self.error
+        return self.result
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    @property
+    def waiting_time(self) -> float:
+        """Definition 1: release -> begin execution."""
+        return self.start_t - self.submit_t
+
+    @property
+    def handling_time(self) -> float:
+        return self.end_t - self.submit_t
+
+
+@dataclass
+class ServerStats:
+    completed: int = 0
+    max_queue_len: int = 0
+    wakeup_latencies: list[float] = field(default_factory=list)  # submit -> dequeue
+    notify_latencies: list[float] = field(default_factory=list)  # fn done -> client wakeable
+
+
+class AcceleratorServer:
+    """Dedicated server thread owning one accelerator (one mesh slice)."""
+
+    def __init__(self, *, ordering: str = "priority", name: str = "gpu-server"):
+        if ordering not in ("priority", "fifo", "edf"):
+            raise ValueError(ordering)
+        self.ordering = ordering
+        self._lock = threading.Condition()
+        self._queue: list[tuple[Any, int, Request]] = []
+        self._seq = 0
+        self._stop = False
+        self.stats = ServerStats()
+        self._thread = threading.Thread(target=self._serve, name=name, daemon=True)
+        self._thread.start()
+
+    # -- client API ------------------------------------------------------
+    def submit(
+        self,
+        fn: Callable[[], Any],
+        *,
+        priority: int = 0,
+        deadline: float | None = None,
+        name: str = "",
+    ) -> Request:
+        req = Request(fn=fn, priority=priority, deadline=deadline, name=name)
+        req.submit_t = time.monotonic()
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("server stopped")
+            self._seq += 1
+            key = self._key(req)
+            heapq.heappush(self._queue, (key, self._seq, req))
+            self.stats.max_queue_len = max(self.stats.max_queue_len, len(self._queue))
+            self._lock.notify()
+        return req
+
+    def call(self, fn: Callable[[], Any], *, priority: int = 0, name: str = "") -> Any:
+        """Submit and suspend until completion (the common client pattern)."""
+        return self.submit(fn, priority=priority, name=name).wait()
+
+    def shutdown(self, *, drain: bool = True, timeout: float = 30.0) -> None:
+        with self._lock:
+            if not drain:
+                self._queue.clear()
+            self._stop = True
+            self._lock.notify()
+        self._thread.join(timeout)
+
+    def __enter__(self) -> "AcceleratorServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()
+
+    # -- internals ---------------------------------------------------------
+    def _key(self, req: Request):
+        if self.ordering == "priority":
+            return -req.priority
+        if self.ordering == "edf":
+            return req.deadline if req.deadline is not None else float("inf")
+        return 0  # fifo: seq breaks ties
+
+    def _serve(self) -> None:
+        while True:
+            with self._lock:
+                while not self._queue and not self._stop:
+                    self._lock.wait()  # server suspends when idle
+                if not self._queue and self._stop:
+                    return
+                _, _, req = heapq.heappop(self._queue)
+            req.start_t = time.monotonic()
+            self.stats.wakeup_latencies.append(req.start_t - req.submit_t)
+            try:
+                req.result = req.fn()  # non-preemptive accelerator execution
+            except BaseException as e:  # noqa: BLE001 - surfaced to the client
+                req.error = e
+            t0 = time.monotonic()
+            req.end_t = t0
+            req._done.set()  # wake the client (it was suspended, not polling)
+            self.stats.notify_latencies.append(time.monotonic() - t0)
+            self.stats.completed += 1

@@ -1,0 +1,435 @@
+"""Discrete-event simulator for partitioned fixed-priority multicore + one
+non-preemptive accelerator, in the three access-control modes the paper
+evaluates:
+
+  * ``server`` — the paper's GPU-server approach (§5.1): clients submit a
+    request and suspend; the server (highest priority on its core) dequeues
+    by task priority, pays eps CPU to dispatch, busy-waits only for the
+    misc (G^m) portion, suspends during the pure-GPU (G^e) portion, pays eps
+    CPU to notify.  Consecutive queued requests are separated by a single
+    eps, matching Figure 4.
+  * ``mpcp``  — synchronization-based, priority-ordered mutex queue; the
+    whole GPU segment busy-waits on the client's CPU at the boosted global
+    priority ceiling (§4).
+  * ``fmlp``  — same, FIFO-ordered mutex queue (FMLP+).
+
+The simulator executes exact protocol semantics and is the ground truth the
+analyses are property-tested against (analysis bound >= simulated response
+time).  Time is integer nanoseconds internally; the public API is float ms.
+
+Job structure: a task's C is split into eta+1 equal normal chunks interleaved
+with its GPU segments (an explicit per-task split can be supplied for case
+studies).  Within a GPU segment, misc time is split half before / half after
+the pure-GPU span, matching Figure 4's depiction.
+"""
+
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+
+from .task_model import System, Task
+
+__all__ = ["simulate", "SimResult", "TraceSlice"]
+
+NS_PER_MS = 1_000_000
+_BOOST = 10**9  # global priority ceiling offset (pi_B)
+_SERVER_PRIO = 10**12
+
+
+def _ns(ms: float) -> int:
+    return int(round(ms * NS_PER_MS))
+
+
+@dataclass(frozen=True)
+class TraceSlice:
+    core: int
+    name: str  # task name or "__gpu_server__"
+    start_ms: float
+    end_ms: float
+    kind: str  # "cpu" | "gcs" (busy-wait critical section) | "server"
+
+
+@dataclass
+class SimResult:
+    response_times: dict[str, list[float]] = field(default_factory=dict)
+    deadline_misses: dict[str, int] = field(default_factory=dict)
+    trace: list[TraceSlice] = field(default_factory=list)
+
+    def wcrt(self, name: str) -> float:
+        rts = self.response_times.get(name, [])
+        return max(rts) if rts else 0.0
+
+    @property
+    def any_miss(self) -> bool:
+        return any(v > 0 for v in self.deadline_misses.values())
+
+
+# --------------------------------------------------------------------------
+# threads & cores
+# --------------------------------------------------------------------------
+
+
+class _Thread:
+    """A schedulable entity on one core (a job in a CPU phase, or the server)."""
+
+    __slots__ = ("name", "core", "base_prio", "prio", "remaining", "kind", "on_done")
+
+    def __init__(self, name: str, core: int, prio: int):
+        self.name = name
+        self.core = core
+        self.base_prio = prio
+        self.prio = prio
+        self.remaining = 0  # ns of the current CPU burst
+        self.kind = "cpu"
+        self.on_done = None  # callback when current burst finishes
+
+
+class _Core:
+    __slots__ = ("idx", "ready", "running", "run_start", "token")
+
+    def __init__(self, idx: int):
+        self.idx = idx
+        self.ready: list[_Thread] = []
+        self.running: _Thread | None = None
+        self.run_start = 0
+        self.token = 0
+
+
+class _Engine:
+    def __init__(self, num_cores: int, trace: bool):
+        self.now = 0
+        self.events: list[tuple[int, int, object]] = []  # (time, seq, fn)
+        self.seq = 0
+        self.cores = [_Core(i) for i in range(num_cores)]
+        self.trace_on = trace
+        self.trace: list[TraceSlice] = []
+
+    def post(self, t: int, fn) -> None:
+        self.seq += 1
+        heapq.heappush(self.events, (t, self.seq, fn))
+
+    # -- CPU scheduling ----------------------------------------------------
+    def _record(self, core: _Core, upto: int) -> None:
+        if self.trace_on and core.running is not None and upto > core.run_start:
+            th = core.running
+            self.trace.append(
+                TraceSlice(core.idx, th.name, core.run_start / NS_PER_MS, upto / NS_PER_MS, th.kind)
+            )
+
+    def reschedule(self, core: _Core) -> None:
+        top = max(core.ready, key=lambda th: th.prio, default=None)
+        cur = core.running
+        if cur is top:
+            return
+        if cur is not None:
+            cur.remaining -= self.now - core.run_start
+            self._record(core, self.now)
+        core.running = top
+        core.run_start = self.now
+        core.token += 1
+        if top is not None:
+            tok = core.token
+            self.post(self.now + top.remaining, lambda: self._burst_end(core, tok))
+
+    def _burst_end(self, core: _Core, tok: int) -> None:
+        if core.token != tok or core.running is None:
+            return  # stale event (thread was preempted or finished earlier)
+        th = core.running
+        self._record(core, self.now)
+        th.remaining = 0
+        core.ready.remove(th)
+        core.running = None
+        core.token += 1
+        cb = th.on_done
+        th.on_done = None
+        if cb is not None:
+            cb()
+        self.reschedule(core)
+
+    def run_burst(self, th: _Thread, dur: int, kind: str, on_done) -> None:
+        """Make ``th`` ready with a CPU burst of ``dur`` ns."""
+        core = self.cores[th.core]
+        th.kind = kind
+        th.on_done = on_done
+        if dur <= 0:
+            # zero-length burst: complete immediately without scheduling
+            self.post(self.now, on_done)
+            return
+        th.remaining = dur
+        core.ready.append(th)
+        self.reschedule(core)
+
+    def set_prio(self, th: _Thread, prio: int) -> None:
+        th.prio = prio
+        core = self.cores[th.core]
+        if th in core.ready or core.running is th:
+            self.reschedule(core)
+
+    def run(self, until: int) -> None:
+        while self.events and self.events[0][0] <= until:
+            t, _, fn = heapq.heappop(self.events)
+            self.now = t
+            fn()
+        self.now = until
+        for core in self.cores:
+            if core.running is not None:
+                core.running.remaining -= self.now - core.run_start
+                self._record(core, self.now)
+
+
+# --------------------------------------------------------------------------
+# accelerator arbitration
+# --------------------------------------------------------------------------
+
+
+class _GpuServer:
+    """The paper's GPU server (mode='server').
+
+    CPU accounting (reconstructed from Lemma 1 + the Figure-4 timeline):
+      * every submit costs eps of server CPU (receive/wake-up) — this is what
+        delays tau_h by eps at time 3 in the example;
+      * every completion costs eps (notify + dequeue-next), and a chained
+        next segment starts right after that single eps (Lemma 3: "the GPU
+        server needs to be invoked only once between two consecutive GPU
+        requests");
+      * the misc portion G^m of a segment is server-core CPU, split half
+        before / half after the pure-GPU span (the example's "two
+        sub-segments of miscellaneous operations");
+      * so extra CPU per request = receive + notify = 2*eps (Lemma 1).
+
+    All server CPU activities are serialized through a small work queue
+    (the server is one thread); segment-progress work (m1/m2/notify) takes
+    precedence over receive work so an in-flight segment is never stretched
+    by unrelated arrivals.
+    """
+
+    def __init__(self, eng: _Engine, core: int, eps: int, *,
+                 ordering: str = "priority"):
+        self.eng = eng
+        self.eps = eps
+        self.ordering = ordering  # "priority" | "fifo" (paper §7 extension)
+        self.queue: list[tuple[int, int, object]] = []  # (key, seq, req)
+        self.seq = 0
+        self.gpu_busy = False
+        self.notify_pending = False  # a completion eps not yet finished
+        self.thread = _Thread("__gpu_server__", core, _SERVER_PRIO)
+        self.work: list[tuple[int, int, object]] = []  # (class, seq, (dur, then))
+        self.cpu_busy = False
+
+    # -- serialized server CPU --------------------------------------------
+    def _cpu(self, dur: int, then, *, segment_work: bool) -> None:
+        self.seq += 1
+        heapq.heappush(self.work, (0 if segment_work else 1, self.seq, (dur, then)))
+        if not self.cpu_busy:
+            self._next_work()
+
+    def _next_work(self) -> None:
+        if not self.work:
+            self.cpu_busy = False
+            return
+        self.cpu_busy = True
+        _, _, (dur, then) = heapq.heappop(self.work)
+
+        def done():
+            then()
+            self._next_work()
+
+        if dur <= 0:
+            self.eng.post(self.eng.now, done)
+        else:
+            self.eng.run_burst(self.thread, dur, "server", done)
+
+    # -- protocol -----------------------------------------------------------
+    def submit(self, prio: int, seg_e: int, seg_m: int, on_complete) -> None:
+        self.seq += 1
+        key = 0 if self.ordering == "fifo" else -prio
+        heapq.heappush(self.queue, (key, self.seq, (seg_e, seg_m, on_complete)))
+        # receive/wake-up: eps of server CPU per request (Lemma 1)
+        self._cpu(self.eps, self._maybe_start, segment_work=False)
+
+    def _maybe_start(self) -> None:
+        if self.gpu_busy or self.notify_pending or not self.queue:
+            return
+        self.gpu_busy = True
+        _, _, (seg_e, seg_m, on_complete) = heapq.heappop(self.queue)
+        m1 = seg_m // 2
+        m2 = seg_m - m1
+
+        def after_m1():
+            # pure-GPU span: server suspends (no CPU demand)
+            self.eng.post(self.eng.now + seg_e, after_e)
+
+        def after_e():
+            self._cpu(m2, after_m2, segment_work=True)
+
+        def after_m2():
+            # completion: eps of server CPU (notify client + dequeue next)
+            self.gpu_busy = False
+            self.notify_pending = True
+            self._cpu(self.eps, complete, segment_work=True)
+
+        def complete():
+            self.notify_pending = False
+            on_complete()
+            self._maybe_start()  # chained segment: single eps paid (Fig. 4)
+
+        self._cpu(m1, after_m1, segment_work=True)
+
+
+class _GpuLock:
+    """Synchronization-based mutex (mode='mpcp' priority queue, 'fmlp' FIFO)."""
+
+    def __init__(self, fifo: bool):
+        self.fifo = fifo
+        self.holder = None
+        self.queue: list[tuple[int, int, object]] = []
+        self.seq = 0
+
+    def acquire(self, prio: int, grant) -> bool:
+        """Returns True if granted immediately, else queues ``grant``."""
+        if self.holder is None:
+            self.holder = grant
+            return True
+        self.seq += 1
+        key = self.seq if self.fifo else -prio
+        heapq.heappush(self.queue, (key, self.seq, grant))
+        return False
+
+    def release(self) -> None:
+        self.holder = None
+        if self.queue:
+            _, _, grant = heapq.heappop(self.queue)
+            self.holder = grant
+            grant()
+
+
+# --------------------------------------------------------------------------
+# jobs
+# --------------------------------------------------------------------------
+
+
+class _Job:
+    def __init__(self, sim: "_Sim", task: Task, release: int):
+        self.sim = sim
+        self.task = task
+        self.release = release
+        eta = task.eta
+        # normal chunks: explicit split if provided, else eta+1 equal chunks
+        split = sim.splits.get(task.name)
+        if split is None:
+            chunk = _ns(task.C) // (eta + 1)
+            last = _ns(task.C) - chunk * eta
+            self.chunks = [chunk] * eta + [last]
+        else:
+            self.chunks = [_ns(c) for c in split]
+        self.phase = 0  # 0..eta: index of next normal chunk
+        self.thread = _Thread(task.name, task.core, task.priority)
+
+    def start(self) -> None:
+        self._run_chunk()
+
+    def _run_chunk(self) -> None:
+        self.sim.eng.run_burst(self.thread, self.chunks[self.phase], "cpu", self._chunk_done)
+
+    def _chunk_done(self) -> None:
+        if self.phase < self.task.eta:
+            seg = self.task.segments[self.phase]
+            self.phase += 1
+            self.sim.gpu_access(self, seg)
+        else:
+            self._finish()
+
+    def gpu_done(self) -> None:
+        self._run_chunk()
+
+    def _finish(self) -> None:
+        rt = (self.sim.eng.now - self.release) / NS_PER_MS
+        self.sim.result.response_times.setdefault(self.task.name, []).append(rt)
+        if rt > self.task.D + 1e-9:
+            self.sim.result.deadline_misses[self.task.name] = (
+                self.sim.result.deadline_misses.get(self.task.name, 0) + 1
+            )
+
+
+class _Sim:
+    def __init__(
+        self,
+        system: System,
+        mode: str,
+        horizon_ms: float,
+        trace: bool,
+        splits: dict[str, list[float]] | None,
+        offsets: dict[str, float] | None,
+    ):
+        self.system = system
+        self.mode = mode
+        self.eng = _Engine(system.num_cores, trace)
+        self.result = SimResult()
+        self.splits = splits or {}
+        self.offsets = offsets or {}
+        self.horizon = _ns(horizon_ms)
+        if mode in ("server", "server_fifo"):
+            core = system.server_core
+            if core < 0:
+                raise ValueError("server mode needs system.server_core set")
+            self.server = _GpuServer(
+                self.eng, core, _ns(system.epsilon),
+                ordering="fifo" if mode == "server_fifo" else "priority")
+            self.mode = "server"
+        elif mode in ("mpcp", "fmlp"):
+            self.lock = _GpuLock(fifo=(mode == "fmlp"))
+        else:
+            raise ValueError(mode)
+
+    def gpu_access(self, job: _Job, seg) -> None:
+        e_ns, m_ns = _ns(seg.e), _ns(seg.m)
+        if self.mode == "server":
+            # client suspends; server handles the segment
+            self.server.submit(job.task.priority, e_ns, m_ns, job.gpu_done)
+        else:
+            th = job.thread
+
+            def granted():
+                # boosted global ceiling; whole segment busy-waits on CPU
+                self.eng.set_prio(th, _BOOST + th.base_prio)
+                th.kind = "gcs"
+                self.eng.run_burst(th, e_ns + m_ns, "gcs", release)
+
+            def release():
+                self.eng.set_prio(th, th.base_prio)
+                self.lock.release()
+                job.gpu_done()
+
+            if self.lock.acquire(job.task.priority, granted):
+                granted()
+
+    def run(self) -> SimResult:
+        for task in self.system.tasks:
+            off = _ns(self.offsets.get(task.name, 0.0))
+            t = off
+            while t < self.horizon:
+                rel = t
+                self.eng.post(rel, lambda task=task, rel=rel: _Job(self, task, rel).start())
+                t += _ns(task.T)
+        self.eng.run(self.horizon)
+        self.result.trace = self.eng.trace
+        return self.result
+
+
+def simulate(
+    system: System,
+    *,
+    mode: str,
+    horizon_ms: float,
+    trace: bool = False,
+    splits: dict[str, list[float]] | None = None,
+    offsets: dict[str, float] | None = None,
+) -> SimResult:
+    """Simulate ``system`` for ``horizon_ms`` under ``mode`` in
+    {'server','mpcp','fmlp'}.  Jobs are released periodically (synchronous
+    release at t=0 unless per-task ``offsets`` are given).  ``splits`` may
+    supply an explicit normal-chunk split (list of ms, length eta+1) per task
+    name."""
+    return _Sim(system, mode, horizon_ms, trace, splits, offsets).run()

@@ -1,0 +1,52 @@
+"""Jitted public wrappers over the Pallas kernels with automatic fallback.
+
+On TPU backends the Pallas kernels run natively; elsewhere (CPU container,
+tests) ``interpret=True`` executes the kernel body in Python for
+correctness, and callers that want speed on CPU use the jnp references
+directly (the model code defaults to the XLA path; kernels are opt-in via
+TrainSettings.use_pallas_kernels).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.kernels import ref
+from repro.kernels.decode_attention import decode_attention as _decode_pallas
+from repro.kernels.flash_attention import flash_attention as _flash_pallas
+from repro.kernels.ssd_scan import ssd_intra as _ssd_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def flash_attention(q, k, v, *, causal: bool = True, scale: float | None = None,
+                    force_pallas: bool = False, interpret: bool | None = None):
+    """q (B,Nq,S,H); k/v (B,Nkv,S,H) -> (B,Nq,S,H)."""
+    if _on_tpu() or force_pallas:
+        itp = interpret if interpret is not None else not _on_tpu()
+        block = 256 if q.shape[2] % 256 == 0 else q.shape[2]
+        return _flash_pallas(q, k, v, causal=causal, scale=scale,
+                             block_q=block, block_k=block, interpret=itp)
+    return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+
+
+def decode_attention(q, k, v, lengths, *, scale: float | None = None,
+                     force_pallas: bool = False, interpret: bool | None = None):
+    """q (B,Nq,H); k/v (B,Nkv,Smax,H); lengths (B,) -> (B,Nq,H)."""
+    if _on_tpu() or force_pallas:
+        itp = interpret if interpret is not None else not _on_tpu()
+        block = 512 if k.shape[2] % 512 == 0 else k.shape[2]
+        return _decode_pallas(q, k, v, lengths, scale=scale, block_k=block,
+                              interpret=itp)
+    return ref.decode_attention_ref(q, k, v, lengths, scale=scale)
+
+
+def ssd_intra(x, dt, dA, B, C, *, force_pallas: bool = False,
+              interpret: bool | None = None):
+    """x (M,H,Q,P); dt/dA (M,H,Q); B/C (M,Q,N) -> (y, s)."""
+    if _on_tpu() or force_pallas:
+        itp = interpret if interpret is not None else not _on_tpu()
+        return _ssd_pallas(x, dt, dA, B, C, interpret=itp)
+    return ref.ssd_intra_ref(x, dt, dA, B, C)

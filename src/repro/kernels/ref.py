@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are THE reference semantics: kernel tests sweep shapes/dtypes and
+assert allclose against these functions (interpret=True on CPU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, scale: float | None = None):
+    """q (B,Nq,S,H); k/v (B,Nkv,S,H) -> (B,Nq,S,H).  Grouped (GQA) heads."""
+    b, nq, s, h = q.shape
+    nkv = k.shape[1]
+    g = nq // nkv
+    scale = scale if scale is not None else h ** -0.5
+    qg = q.reshape(b, nkv, g, s, h)
+    logits = jnp.einsum("bkgsh,bkth->bkgst", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        idx = jnp.arange(s)
+        mask = idx[None, :] <= idx[:, None]
+        logits = jnp.where(mask, logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgst,bkth->bkgsh", probs, v.astype(jnp.float32))
+    return out.reshape(b, nq, s, h).astype(q.dtype)
+
+
+def decode_attention_ref(q, k, v, lengths, *, scale: float | None = None):
+    """q (B,Nq,H); k/v (B,Nkv,S,H); lengths (B,) -> (B,Nq,H).
+
+    Attends to positions < lengths[b] (a KV cache of logical length
+    lengths[b] inside a max_seq buffer)."""
+    b, nq, h = q.shape
+    nkv, s = k.shape[1], k.shape[2]
+    g = nq // nkv
+    scale = scale if scale is not None else h ** -0.5
+    qg = q.reshape(b, nkv, g, h)
+    logits = jnp.einsum("bkgh,bkth->bkgt", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    valid = jnp.arange(s)[None, :] < lengths[:, None]  # (B,S)
+    logits = jnp.where(valid[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bkgt,bkth->bkgh", probs, v.astype(jnp.float32))
+    return out.reshape(b, nq, h).astype(q.dtype)
+
+
+def ssd_intra_ref(x, dt, dA, B, C):
+    """Intra-chunk SSD + chunk-state summary (one chunk per leading index).
+
+    x  (M, H, Q, P)   inputs (M = batch*num_chunks)
+    dt (M, H, Q)      positive step sizes
+    dA (M, H, Q)      dt * A  (negative)
+    B  (M, Q, N)      input projection (shared across heads; G=1)
+    C  (M, Q, N)      output projection
+    returns y (M, H, Q, P) = intra-chunk output,
+            s (M, H, N, P) = end-of-chunk state contribution
+    """
+    f32 = jnp.float32
+    seg = jnp.cumsum(dA.astype(f32), axis=-1)  # (M,H,Q)
+    q = x.shape[2]
+    idx = jnp.arange(q)
+    causal = idx[:, None] >= idx[None, :]
+    L = jnp.exp(jnp.where(causal[None, None], seg[..., :, None] - seg[..., None, :],
+                          -1e30))
+    cb = jnp.einsum("min,mjn->mij", C.astype(f32), B.astype(f32))  # (M,Q,Q)
+    w = cb[:, None] * L  # (M,H,Q,Q)
+    xdt = x.astype(f32) * dt.astype(f32)[..., None]
+    y = jnp.einsum("mhij,mhjp->mhip", w, xdt)
+    dte = jnp.exp(seg[..., -1:] - seg) * dt.astype(f32)  # (M,H,Q)
+    s = jnp.einsum("mhq,mqn,mhqp->mhnp", dte, B.astype(f32), x.astype(f32))
+    return y.astype(x.dtype), s.astype(f32)

@@ -1,0 +1,208 @@
+import os
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    # compile-only dry-run: keep native bf16 dots (TPU semantics) instead of
+    # the CPU runtime's f32 legalization, which otherwise duplicates bf16
+    # caches/weights as f32 loop carries and poisons the roofline terms
+    "--xla_cpu_strict_dot_conv_math=false"
+)
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell with ShapeDtypeStruct stand-ins (no allocation), record
+memory/cost analysis + roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.dryrun --arch llama3_405b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod-only|--single-pod-only]
+
+Artifacts: artifacts/dryrun/<arch>__<shape>__<mesh>.json
+The roofline table (§Roofline) reads the single-pod artifacts.
+"""
+
+import argparse  # noqa: E402
+import json  # noqa: E402
+import pathlib  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.analysis import roofline  # noqa: E402
+from repro.configs.registry import ARCH_IDS, SHAPES, get_config, shapes_for  # noqa: E402
+from repro.launch import mesh as mesh_mod  # noqa: E402
+from repro.launch import steps as steps_mod  # noqa: E402
+from repro.models import model as M  # noqa: E402
+from repro.training import optimizer as opt  # noqa: E402
+from repro.training import train_step as ts  # noqa: E402
+
+ART = pathlib.Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
+
+
+def _sds_tree(tree):
+    return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
+               settings: ts.TrainSettings | None = None,
+               shard_seq: bool = False, fsdp: bool = True,
+               variant: str = "baseline"):
+    """Lower+compile one cell; returns (compiled, lowered, meta).
+
+    ``variant`` names a repro.models.perf.VARIANTS entry (the §Perf
+    hillclimb knobs); "baseline" is the naive configuration the roofline
+    table was recorded with."""
+    import dataclasses
+
+    from repro.models import perf
+
+    flags = perf.VARIANTS[variant]
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    mesh = mesh_mod.make_production_mesh(multi_pod=multi_pod)
+    n_model = mesh.shape["model"]
+    # sequence-parallel activations only when the seq divides the model axis
+    shard_seq = ((shard_seq or flags.shard_seq) and shape.kind == "train"
+                 and shape.seq_len % n_model == 0)
+    rules = mesh_mod.make_rules(mesh, multi_pod=multi_pod, shard_seq=shard_seq,
+                                fsdp=fsdp)
+    if flags.moe_decode == "tp_data" and shape.kind == "decode" and cfg.is_moe:
+        rules = dataclasses.replace(rules, expert_ff_fsdp=True)
+    if flags.serve_2d and shape.kind == "decode":
+        rules = dataclasses.replace(
+            rules, shard_batch=False,
+            seq_axes=(*rules.batch_axes, rules.model_axis))
+    perf.set_flags(flags)
+
+    params_shape = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                                  jax.random.PRNGKey(0))
+    batch_shapes = M.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        settings = settings or ts.TrainSettings()
+        step = steps_mod.build_train_step(cfg, rules, settings, batch_shapes)
+        opt_shape = jax.eval_shape(lambda p: opt.init(p, settings.adamw), params_shape)
+        args = (params_shape, _sds_tree(opt_shape), batch_shapes)
+    elif shape.kind == "prefill":
+        step = steps_mod.build_prefill(cfg, rules, max_seq=shape.seq_len,
+                                       batch=shape.global_batch,
+                                       batch_shapes=batch_shapes)
+        args = (params_shape, batch_shapes)
+    else:  # decode
+        cache_shapes = jax.eval_shape(
+            lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+        step = steps_mod.build_decode(cfg, rules, max_seq=shape.seq_len,
+                                      batch=shape.global_batch,
+                                      batch_shapes=batch_shapes,
+                                      cache_shapes=_sds_tree(cache_shapes))
+        args = (params_shape, batch_shapes, _sds_tree(cache_shapes))
+
+    try:
+        t0 = time.perf_counter()
+        lowered = step.lower(*args)
+        t1 = time.perf_counter()
+        compiled = lowered.compile()
+        t2 = time.perf_counter()
+    finally:
+        perf.set_flags(None)
+    meta = {"lower_s": t1 - t0, "compile_s": t2 - t1, "chips": mesh.size,
+            "shard_seq": shard_seq, "variant": variant}
+    return compiled, lowered, meta, cfg, shape
+
+
+def _model_flops(cfg, shape) -> float:
+    n_active = M.param_count(cfg, active_only=True)
+    if shape.kind == "train":
+        return roofline.train_model_flops(n_active,
+                                          shape.global_batch * shape.seq_len)
+    if shape.kind == "prefill":
+        return roofline.prefill_model_flops(n_active,
+                                            shape.global_batch * shape.seq_len)
+    return roofline.decode_model_flops(n_active, shape.global_batch)
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool,
+             settings=None, tag: str = "", variant: str = "baseline") -> dict:
+    mesh_name = "multi_pod" if multi_pod else "single_pod"
+    if variant != "baseline" and not tag:
+        tag = f"__{variant}"
+    record: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+                    "status": "ok", "variant": variant}
+    try:
+        compiled, lowered, meta, cfg, shape = lower_cell(
+            arch, shape_name, multi_pod=multi_pod, settings=settings,
+            variant=variant)
+        record.update(meta)
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                         "temp_size_in_bytes", "generated_code_size_in_bytes"):
+                record[attr] = getattr(mem, attr, None)
+        cost = compiled.cost_analysis() or {}
+        record["cost_flops"] = float(cost.get("flops", 0.0))
+        record["cost_bytes"] = float(cost.get("bytes accessed", 0.0))
+        if not multi_pod:
+            hlo = compiled.as_text()
+            terms = roofline.analyze(
+                cost, hlo, chips=record["chips"],
+                model_flops=_model_flops(cfg, shape),
+                flops_are_global=False,  # CPU backend: per-partition module
+            )
+            record["roofline"] = terms.to_dict()
+    except Exception as e:  # noqa: BLE001 - recorded, not fatal
+        record["status"] = "error"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    out = ART / f"{arch}__{shape_name}__{mesh_name}{tag}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(record, indent=1, default=str))
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", type=str, default="")
+    ap.add_argument("--shape", type=str, default="")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--single-pod-only", action="store_true")
+    ap.add_argument("--multi-pod-only", action="store_true")
+    ap.add_argument("--variant", default="baseline",
+                    help="perf variant (repro.models.perf.VARIANTS)")
+    args = ap.parse_args()
+
+    cells: list[tuple[str, str, bool]] = []
+    if args.all:
+        for arch in ARCH_IDS:
+            cfg = get_config(arch)
+            for shape in shapes_for(cfg):
+                if not args.multi_pod_only:
+                    cells.append((arch, shape.name, False))
+                if not args.single_pod_only:
+                    cells.append((arch, shape.name, True))
+    else:
+        if not args.arch or not args.shape:
+            ap.error("--arch and --shape required unless --all")
+        cells.append((args.arch, args.shape, args.multi_pod))
+
+    failures = 0
+    for arch, shape, mp in cells:
+        t0 = time.perf_counter()
+        rec = run_cell(arch, shape, multi_pod=mp, variant=args.variant)
+        dt = time.perf_counter() - t0
+        mesh_name = "multi_pod" if mp else "single_pod"
+        if rec["status"] == "ok":
+            r = rec.get("roofline") or {}
+            print(f"OK   {arch:24s} {shape:12s} {mesh_name:10s} "
+                  f"compile={rec['compile_s']:.1f}s "
+                  f"bottleneck={r.get('bottleneck', '-'):10s} "
+                  f"frac={r.get('roofline_fraction', 0):.3f} ({dt:.1f}s)")
+        else:
+            failures += 1
+            print(f"FAIL {arch:24s} {shape:12s} {mesh_name:10s} {rec['error']}")
+        import sys
+        sys.stdout.flush()
+    if failures:
+        raise SystemExit(f"{failures} dry-run cells failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+Built lazily via functions so importing this module never touches jax
+device state (the dry-run sets XLA_FLAGS before first jax init; smoke
+tests must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+from repro.distributed.sharding import ShardingRules
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_rules(mesh, *, multi_pod: bool = False, fsdp: bool = True,
+               shard_seq: bool = False) -> ShardingRules:
+    return ShardingRules(
+        mesh=mesh,
+        batch_axes=("pod", "data") if multi_pod else ("data",),
+        model_axis="model",
+        fsdp=fsdp,
+        shard_seq=shard_seq,
+    )
+
+
+def make_debug_mesh(n: int, *, axes=("data", "model"), shape=None):
+    """Small host-device mesh for tests (requires
+    xla_force_host_platform_device_count set before jax init)."""
+    devs = jax.devices()[:n]
+    if shape is None:
+        shape = (1, n)
+    import numpy as np
+
+    return jax.sharding.Mesh(np.asarray(devs).reshape(shape), axes)

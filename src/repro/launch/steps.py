@@ -1,0 +1,119 @@
+"""Step builders shared by launchers and the dry-run: jitted train / prefill
+/ decode steps with explicit in/out shardings for the production mesh.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.training import optimizer as opt
+from repro.training import train_step as ts
+
+
+def _named(tree, mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def cache_pspecs(cache_shapes, rules: shd.ShardingRules, *, batch: int, seq: int):
+    """PartitionSpec tree for a decode cache.
+
+    Per leaf: the sequence dim (== seq) shards over the model axis (over
+    ALL axes when batch == 1, long-context); the batch dim (== batch) over
+    the DP axes; state-like leaves without a sequence dim shard their first
+    model-divisible channel/head dim over the model axis."""
+    model_size = rules.mesh.shape[rules.model_axis]
+    batch_axes = rules.batch()
+
+    def spec(leaf):
+        shape = leaf.shape
+        nd = len(shape)
+        if nd <= 1:
+            return P()
+        out = [None] * nd
+        si = next((i for i in range(1, nd) if seq > 1 and shape[i] == seq), None)
+        bi = next((i for i in range(1, nd)
+                   if batch > 1 and rules.shard_batch
+                   and shape[i] == batch and i != si), None)
+        if si is not None:
+            out[si] = ((*rules.batch_axes, rules.model_axis)
+                       if (batch == 1 or not rules.shard_batch)
+                       else rules.seq_axes if len(rules.seq_axes) > 1
+                       else rules.seq_axes[0])
+        if bi is not None:
+            out[bi] = batch_axes
+        if si is None:
+            start = (bi + 1) if bi is not None else 1
+            for i in range(start, nd):
+                if i != bi and shape[i] % model_size == 0 and shape[i] >= model_size:
+                    out[i] = rules.model_axis
+                    break
+        return P(*out)
+
+    return jax.tree.map(spec, cache_shapes)
+
+
+def logits_pspec(rules: shd.ShardingRules, *, batch: int, vocab: int):
+    b = rules.batch() if batch > 1 else None
+    model_size = rules.mesh.shape[rules.model_axis]
+    v = rules.model_axis if vocab % model_size == 0 else None
+    return P(b, None, v)
+
+
+def build_train_step(cfg, rules, settings: ts.TrainSettings, batch_shapes):
+    return ts.build_train_step(cfg, settings, rules, batch_shapes)
+
+
+def build_prefill(cfg, rules: shd.ShardingRules, *, max_seq: int, batch: int,
+                  batch_shapes):
+    mesh = rules.mesh
+
+    def fn(params, batch_):
+        with shd.use_rules(rules):
+            logits, cache, _ = M.apply(cfg, params, {**batch_, "max_seq": max_seq},
+                                       mode="prefill")
+            return logits, cache
+
+    params_shape = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                                  jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(params_shape, rules)
+    bspecs = ts.batch_specs(cfg, batch_shapes, rules)
+    out_shape = jax.eval_shape(fn, params_shape, batch_shapes)
+    cspecs = cache_pspecs(out_shape[1], rules, batch=batch, seq=max_seq)
+    return jax.jit(
+        fn,
+        in_shardings=(_named(pspecs, mesh), _named(bspecs, mesh)),
+        out_shardings=(NamedSharding(mesh, logits_pspec(rules, batch=batch, vocab=cfg.vocab_size)),
+                       _named(cspecs, mesh)),
+    )
+
+
+def build_decode(cfg, rules: shd.ShardingRules, *, max_seq: int, batch: int,
+                 batch_shapes, cache_shapes):
+    mesh = rules.mesh
+
+    def fn(params, batch_, cache):
+        with shd.use_rules(rules):
+            logits, cache, _ = M.apply(cfg, params, batch_, mode="decode",
+                                       cache=cache)
+            return logits, cache
+
+    params_shape = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                                  jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(params_shape, rules)
+    bspecs = ts.batch_specs(cfg, batch_shapes, rules)
+    cspecs = cache_pspecs(cache_shapes, rules, batch=batch, seq=max_seq)
+    return jax.jit(
+        fn,
+        in_shardings=(_named(pspecs, mesh), _named(bspecs, mesh),
+                      _named(cspecs, mesh)),
+        out_shardings=(NamedSharding(mesh, logits_pspec(rules, batch=batch, vocab=cfg.vocab_size)),
+                       _named(cspecs, mesh)),
+        donate_argnums=(2,),
+    )

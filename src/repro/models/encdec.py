@@ -1,0 +1,198 @@
+"""Whisper-style encoder-decoder backbone.
+
+The audio frontend (log-mel + conv1d subsampling) is a STUB: the encoder
+consumes precomputed frame embeddings (B, encoder_seq, d_model) supplied by
+``input_specs()``.  Positions are sinusoidal (parameter-free) — an
+adaptation of Whisper's learned 448-position table, which cannot cover the
+assigned 4k/32k decoder shapes (DESIGN.md §8).
+
+Decode cache: per decoder layer, self-attention K/V (growing) plus
+cross-attention K/V (computed once from the encoder output at prefill).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+
+
+def init_cross_attention(cfg, key, dtype):
+    d, n, nkv, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": L.dense_init(ks[0], (d, n, hd), dtype),
+        "wk": L.dense_init(ks[1], (d, nkv, hd), dtype),
+        "wv": L.dense_init(ks[2], (d, nkv, hd), dtype),
+        "wo": L.dense_init(ks[3], (n, hd, d), dtype, scale=1.0 / math.sqrt(n * hd)),
+    }
+
+
+def init_encoder_layer(cfg, key, dtype):
+    ks = jax.random.split(key, 2)
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model, dtype),
+        "attn": L.init_attention(cfg, ks[0], dtype),
+        "ln2": L.init_rms_norm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(cfg, ks[1], dtype),
+    }
+
+
+def init_decoder_layer(cfg, key, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "ln1": L.init_rms_norm(cfg.d_model, dtype),
+        "attn": L.init_attention(cfg, ks[0], dtype),
+        "ln_x": L.init_rms_norm(cfg.d_model, dtype),
+        "cross": init_cross_attention(cfg, ks[1], dtype),
+        "ln2": L.init_rms_norm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(cfg, ks[2], dtype),
+    }
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    params = {
+        "embed": L.embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "encoder": jax.vmap(
+            lambda k: init_encoder_layer(cfg, k, dtype)
+        )(jax.random.split(ks[1], cfg.encoder_layers)),
+        "enc_norm": L.init_rms_norm(cfg.d_model, dtype),
+        "decoder": jax.vmap(
+            lambda k: init_decoder_layer(cfg, k, dtype)
+        )(jax.random.split(ks[2], cfg.num_layers)),
+        "final_norm": L.init_rms_norm(cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[3], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n, hd = cfg.num_kv_heads, cfg.head_dim
+
+    def kv(seq):
+        return (jnp.zeros((batch, seq, n, hd), dtype),
+                jnp.zeros((batch, seq, n, hd), dtype))
+
+    return {
+        "self": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)), kv(max_seq)),
+        "cross": jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.num_layers, *a.shape)),
+            kv(cfg.encoder_seq)),
+        "pos": jnp.zeros((batch,), jnp.int32),
+    }
+
+
+def encode(cfg, params, frames):
+    """frames (B, T_enc, D) — precomputed embeddings (frontend stub)."""
+    b, t, _ = frames.shape
+    pos = jnp.broadcast_to(jnp.arange(t)[None, :], (b, t))
+    x = frames + L.sinusoidal_positions(pos, cfg.d_model).astype(frames.dtype)
+    x = shd.shard_hidden(x)
+
+    def body(x, lp):
+        h = L.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps)
+        # bidirectional: no mask
+        q = jnp.einsum("bsd,dnh->bsnh", h, lp["attn"]["wq"])
+        k = jnp.einsum("bsd,dnh->bsnh", h, lp["attn"]["wk"])
+        v = jnp.einsum("bsd,dnh->bsnh", h, lp["attn"]["wv"])
+        o = L._sdpa(q, k, v, mask=None, scale=1.0 / math.sqrt(cfg.head_dim))
+        x = x + jnp.einsum("bsnh,nhd->bsd", o, lp["attn"]["wo"])
+        h = L.rms_norm(x, lp["ln2"]["scale"], cfg.norm_eps)
+        x = x + L.mlp(cfg, lp["mlp"], h)
+        return shd.shard_hidden(x), None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_norm"]["scale"], cfg.norm_eps)
+
+
+def _cross_attention(cfg, p, x, k, v):
+    q = jnp.einsum("bsd,dnh->bsnh", x, p["wq"])
+    o = L._sdpa(q, k, v, mask=None, scale=1.0 / math.sqrt(cfg.head_dim))
+    return jnp.einsum("bsnh,nhd->bsd", o, p["wo"])
+
+
+def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
+            remat_policy=None):
+    """batch: 'frames' (B,T_enc,D) for train/prefill; 'tokens' (B,S)."""
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = shd.shard_hidden(x)
+
+    if mode == "decode":
+        positions = cache["pos"][:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+    x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+
+    if mode == "decode":
+        enc_out = None  # cross K/V come from the cache
+    else:
+        enc_out = encode(cfg, params, batch["frames"])
+
+    def body(carry, inp):
+        x = carry
+        if mode == "decode":
+            lp, (sc, cc) = inp
+            self_cache = sc + (cache["pos"],)
+        else:
+            lp, self_cache, cc = inp, None, None
+        h = L.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps)
+        out, new_self = L.attention(
+            cfg, lp["attn"], h, positions=positions,
+            cache="build" if mode == "prefill" else None,
+            layer_cache=self_cache)
+        x = x + out
+        h = L.rms_norm(x, lp["ln_x"]["scale"], cfg.norm_eps)
+        if mode == "decode":
+            ck, cv = cc
+        else:
+            ck = jnp.einsum("btd,dnh->btnh", enc_out, lp["cross"]["wk"])
+            cv = jnp.einsum("btd,dnh->btnh", enc_out, lp["cross"]["wv"])
+        x = x + _cross_attention(cfg, lp["cross"], h, ck, cv)
+        h = L.rms_norm(x, lp["ln2"]["scale"], cfg.norm_eps)
+        x = x + L.mlp(cfg, lp["mlp"], h)
+        new_cross = (ck, cv) if mode == "prefill" else None
+        return x, (new_self, new_cross)
+
+    body_fn = jax.checkpoint(body, policy=remat_policy) if remat else body
+    xs = (params["decoder"], (cache["self"], cache["cross"])) \
+        if mode == "decode" else params["decoder"]
+    x, (self_c, cross_c) = jax.lax.scan(body_fn, x, xs)
+
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, table, preferred_element_type=jnp.float32)
+    logits = shd.shard_logits(logits)
+
+    if mode == "train":
+        return logits, None, jnp.zeros((), jnp.float32)
+
+    if mode == "prefill":
+        max_seq = batch.get("max_seq", s)
+        self_c = jax.tree.map(lambda a: _pad_seq(a, 2, max_seq), self_c)
+        new_cache = {"self": self_c, "cross": cross_c,
+                     "pos": jnp.full((b,), s, jnp.int32)}
+    else:
+        new_cache = {"self": self_c, "cross": cache["cross"],
+                     "pos": cache["pos"] + 1}
+    new_cache["self"] = jax.tree.map(
+        lambda a: shd.shard_cache_seq(a, batch_axis=1, seq_axis=2), new_cache["self"])
+    return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _pad_seq(x, axis: int, target: int):
+    if x.shape[axis] == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, pads)

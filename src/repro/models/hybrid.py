@@ -1,0 +1,196 @@
+"""Zamba2-style hybrid stack: a Mamba-2 backbone with a single SHARED
+attention+MLP block applied every ``attn_every`` layers (weights shared
+across all applications; real Zamba2 adds per-use LoRA deltas, omitted —
+DESIGN.md §5).
+
+Layout for scan-friendliness: the depth is decomposed into
+  G groups x [ (attn_every - 1) mamba layers + 1 shared-attn application ]
++ R tail mamba layers,
+with G = num_layers // attn_every and R = num_layers - G * attn_every.
+The group scan carries stacked mamba weights (G, attn_every-1, ...) and the
+shared block enters as a closed-over constant, so the HLO is O(1) in depth.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import ssm as S
+from repro.models.transformer import block as tf_block
+
+
+def _split(cfg) -> tuple[int, int, int]:
+    g = cfg.num_layers // cfg.attn_every
+    per_group = cfg.attn_every - 1  # mamba layers per group
+    tail = cfg.num_layers - g * cfg.attn_every
+    return g, per_group, tail
+
+
+def init_mamba_layer(cfg, key, dtype):
+    return {"ln1": L.init_rms_norm(cfg.d_model, dtype),
+            "mamba": S.init_mamba2(cfg, key, dtype)}
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    g, per_group, tail = _split(cfg)
+    ks = jax.random.split(key, 6)
+    params: dict = {"embed": L.embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype)}
+
+    def init_group(k):
+        kk = jax.random.split(k, per_group)
+        return jax.vmap(lambda q: init_mamba_layer(cfg, q, dtype))(kk)
+
+    params["groups"] = jax.vmap(init_group)(jax.random.split(ks[1], g))
+    params["shared_attn"] = {
+        "ln1": L.init_rms_norm(cfg.d_model, dtype),
+        "attn": L.init_attention(cfg, ks[2], dtype),
+        "ln2": L.init_rms_norm(cfg.d_model, dtype),
+        "mlp": L.init_mlp(cfg, ks[3], dtype),
+    }
+    if tail:
+        params["tail"] = jax.vmap(
+            lambda q: init_mamba_layer(cfg, q, dtype)
+        )(jax.random.split(ks[4], tail))
+    params["final_norm"] = L.init_rms_norm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[5], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    g, per_group, tail = _split(cfg)
+
+    def mamba_cache():
+        return (
+            jnp.zeros((batch, cfg.conv_width - 1, S.conv_dim(cfg)), dtype),
+            jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim,
+                       cfg.ssm_state_dim), jnp.float32),
+        )
+
+    def attn_cache():
+        return (
+            jnp.zeros((batch, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+            jnp.zeros((batch, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+        )
+
+    grp_mamba = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (g, per_group, *a.shape)), mamba_cache())
+    grp_attn = jax.tree.map(
+        lambda a: jnp.broadcast_to(a, (g, *a.shape)), attn_cache())
+    cache = {"groups_mamba": grp_mamba, "groups_attn": grp_attn,
+             "pos": jnp.zeros((batch,), jnp.int32)}
+    if tail:
+        cache["tail"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (tail, *a.shape)), mamba_cache())
+    return cache
+
+
+def _mamba_sub(cfg, p, x, *, mode, layer_cache):
+    h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if mode == "prefill":
+        out, c = S.prefill_mamba_cache(cfg, p["mamba"], h)
+    else:
+        out, c = S.mamba2_block(cfg, p["mamba"], h, layer_cache=layer_cache)
+    return x + out, c
+
+
+def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
+            remat_policy=None):
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    x = shd.shard_hidden(x)
+    b, s, _ = x.shape
+    g, per_group, tail = _split(cfg)
+
+    if mode == "decode":
+        positions = cache["pos"][:, None]
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+
+    shared = params["shared_attn"]
+
+    def group_body(carry, inp):
+        x = carry
+        if mode == "decode":
+            gp, (mc, ac) = inp
+        else:
+            gp, mc, ac = inp, None, None
+
+        def inner(carry2, inp2):
+            xx = carry2
+            if mode == "decode":
+                lp, lc = inp2
+                lc = lc + (cache["pos"],)
+            else:
+                lp, lc = inp2, None
+            xx, c = _mamba_sub(cfg, lp, xx, mode=mode, layer_cache=lc)
+            return xx, c
+
+        inner_xs = (gp, mc) if mode == "decode" else gp
+        x, mamba_caches = jax.lax.scan(inner, x, inner_xs)
+
+        # shared attention block
+        h = L.rms_norm(x, shared["ln1"]["scale"], cfg.norm_eps)
+        lc = ac + (cache["pos"],) if mode == "decode" else None
+        out, attn_c = L.attention(cfg, shared["attn"], h, positions=positions,
+                                  cache="build" if mode == "prefill" else None,
+                                  layer_cache=lc)
+        x = x + out
+        h = L.rms_norm(x, shared["ln2"]["scale"], cfg.norm_eps)
+        x = x + L.mlp(cfg, shared["mlp"], h)
+        return x, (mamba_caches, attn_c)
+
+    body = jax.checkpoint(group_body, policy=remat_policy) if remat else group_body
+    xs = (params["groups"], (cache["groups_mamba"], cache["groups_attn"])) \
+        if mode == "decode" else params["groups"]
+    x, (grp_mamba_c, grp_attn_c) = jax.lax.scan(body, x, xs)
+
+    tail_c = None
+    if tail:
+        def tail_body(carry, inp):
+            xx = carry
+            if mode == "decode":
+                lp, lc = inp
+                lc = lc + (cache["pos"],)
+            else:
+                lp, lc = inp, None
+            xx, c = _mamba_sub(cfg, lp, xx, mode=mode, layer_cache=lc)
+            return xx, c
+
+        tail_xs = (params["tail"], cache["tail"]) if mode == "decode" else params["tail"]
+        x, tail_c = jax.lax.scan(tail_body, x, tail_xs)
+
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, table, preferred_element_type=jnp.float32)
+    logits = shd.shard_logits(logits)
+
+    if mode == "train":
+        return logits, None, jnp.zeros((), jnp.float32)
+
+    new_cache = {"groups_mamba": grp_mamba_c, "groups_attn": grp_attn_c}
+    if tail:
+        new_cache["tail"] = tail_c
+    if mode == "prefill":
+        new_cache["pos"] = jnp.full((b,), s, jnp.int32)
+        max_seq = batch.get("max_seq", s)
+        new_cache["groups_attn"] = jax.tree.map(
+            lambda a: _pad_seq(a, 2, max_seq), new_cache["groups_attn"])
+    else:
+        new_cache["pos"] = cache["pos"] + 1
+    new_cache["groups_attn"] = jax.tree.map(
+        lambda a: shd.shard_cache_seq(a, batch_axis=1, seq_axis=2),
+        new_cache["groups_attn"])
+    return logits, new_cache, jnp.zeros((), jnp.float32)
+
+
+def _pad_seq(x, axis: int, target: int):
+    if x.shape[axis] == target:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - x.shape[axis])
+    return jnp.pad(x, pads)

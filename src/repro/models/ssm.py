@@ -1,0 +1,254 @@
+"""Mamba-2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+computation within chunks + a sequential state pass between chunks (O(S)
+overall).  Decode is a single recurrent state update.
+
+The intra-chunk computation is the compute hot-spot; kernels/ssd_scan.py
+provides the Pallas TPU kernel, with ``ssd_chunked`` here as the pure-jnp
+oracle (re-exported by kernels/ref.py).
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models.layers import Params, dense_init, rms_norm
+
+DEFAULT_CHUNK = 256
+
+
+def conv_dim(cfg) -> int:
+    return cfg.d_inner + 2 * cfg.ssm_ngroups * cfg.ssm_state_dim
+
+
+def init_mamba2(cfg, key, dtype) -> Params:
+    from repro.models import perf
+
+    d = cfg.d_model
+    d_in = cfg.d_inner
+    h = cfg.ssm_nheads
+    cdim = conv_dim(cfg)
+    ks = jax.random.split(key, 6)
+    p: Params = {
+        "conv_w": dense_init(ks[1], (cfg.conv_width, cdim), dtype,
+                             scale=1.0 / math.sqrt(cfg.conv_width)),
+        "conv_b": jnp.zeros((cdim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "ssm_D": jnp.ones((h,), jnp.float32),
+        "gate_norm": jnp.ones((d_in,), dtype),
+        "out_proj": dense_init(ks[2], (d_in, d), dtype),
+    }
+    if perf.current().split_ssm_proj:
+        # §Perf: three cleanly-TP-shardable projections instead of one fused
+        # matmul whose output width (d_in + cdim + h) rarely divides the
+        # model axis (which forces fully replicated compute)
+        p["z_proj"] = dense_init(ks[0], (d, d_in), dtype)
+        p["xbc_proj"] = dense_init(jax.random.fold_in(ks[0], 1), (d, cdim), dtype)
+        p["dt_proj"] = dense_init(jax.random.fold_in(ks[0], 2), (d, h), dtype)
+    else:
+        p["in_proj"] = dense_init(ks[0], (d, d_in + cdim + h), dtype)
+    return p
+
+
+def _in_projections(cfg, p: Params, x):
+    """-> (z (B,S,d_in), xBC (B,S,cdim), dt_raw (B,S,H))."""
+    d_in = cfg.d_inner
+    cdim = conv_dim(cfg)
+    if "in_proj" in p:
+        zxbcdt = jnp.einsum("bsd,de->bse", x, p["in_proj"])
+        return jnp.split(zxbcdt, [d_in, d_in + cdim], axis=-1)
+    z = jnp.einsum("bsd,de->bse", x, p["z_proj"])
+    xBC = jnp.einsum("bsd,de->bse", x, p["xbc_proj"])
+    dt = jnp.einsum("bsd,de->bse", x, p["dt_proj"])
+    return z, xBC, dt
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv1d.  x (B,S,C), w (W,C) -> (B,S,C)."""
+    width = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    # sum of shifted slices: cheap and fusion-friendly for small W
+    out = jnp.zeros_like(x)
+    s = x.shape[1]
+    for i in range(width):
+        out = out + pad[:, i:i + s, :] * w[i]
+    return out + b
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int):
+    """Chunked SSD scan (pure jnp oracle).
+
+    x  (B,S,H,P)   per-head inputs
+    dt (B,S,H)     positive step sizes (softplus applied by caller)
+    A  (H,)        negative per-head decay rates
+    B  (B,S,G,N)   input projections  (G groups broadcast over H)
+    C  (B,S,G,N)   output projections
+    returns y (B,S,H,P), final_state (B,H,P,N)
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    assert s % chunk == 0, (s, chunk)
+    nc = s // chunk
+    hg = h // g  # heads per group
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, g, n).astype(jnp.float32)
+
+    dA = dtc * A  # (B,NC,Q,H), negative
+    seg = jnp.cumsum(dA, axis=2)  # within-chunk cumulative decay
+
+    # intra-chunk (attention-like): L[i,j] = exp(seg_i - seg_j) for i >= j.
+    # Mask INSIDE the exp: masked entries have seg_i - seg_j > 0 and exp
+    # overflows to inf, which would turn the where-gradient into inf*0=NaN.
+    li = seg[:, :, :, None, :]  # (B,NC,Q,1,H)
+    lj = seg[:, :, None, :, :]  # (B,NC,1,Q,H)
+    idx = jnp.arange(chunk)
+    causal = idx[:, None] >= idx[None, :]
+    L = jnp.exp(jnp.where(causal[None, None, :, :, None], li - lj, -1e30))
+
+    # scores: C_i . B_j per group
+    cb = jnp.einsum("bcign,bcjgn->bcijg", Cc, Bc)  # (B,NC,Q,Q,G)
+    cb = jnp.repeat(cb, hg, axis=-1)  # broadcast groups -> heads
+    w = cb * L  # (B,NC,Q,Q,H)
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # dt-weighted inputs
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xdt)
+
+    # chunk summaries: S_c = sum_j exp(seg_last - seg_j) * dt_j B_j x_j^T
+    decay_to_end = jnp.exp(seg[:, :, -1:, :] - seg)  # (B,NC,Q,H)
+    Bh = jnp.repeat(Bc, hg, axis=3)  # (B,NC,Q,H,N)
+    s_c = jnp.einsum("bcjh,bcjhn,bcjhp->bchpn", decay_to_end * dtc, Bh, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(seg[:, :, -1, :])  # (B,NC,H)
+
+    # inter-chunk: h_c = chunk_decay_c * h_{c-1} + S_c (sequential over NC)
+    def step(hprev, inp):
+        dec, sc = inp
+        hnew = dec[:, :, None, None] * hprev + sc
+        return hnew, hprev  # emit the state *entering* the chunk
+
+    h0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final, h_in = jax.lax.scan(
+        step,
+        h0,
+        (jnp.moveaxis(chunk_decay, 1, 0), jnp.moveaxis(s_c, 1, 0)),
+    )
+    h_in = jnp.moveaxis(h_in, 0, 1)  # (B,NC,H,P,N)
+
+    # inter-chunk contribution: y_i += exp(seg_i) * C_i . h_in
+    Ch = jnp.repeat(Cc, hg, axis=3)  # (B,NC,Q,H,N)
+    y_inter = jnp.einsum("bcihn,bchpn->bcihp", Ch * jnp.exp(seg)[..., None], h_in)
+
+    y = (y_intra + y_inter).reshape(b, s, h, p)
+    return y.astype(x.dtype), final
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """One recurrent step.  state (B,H,P,N); x (B,H,P); dt (B,H);
+    B,C (B,G,N).  Returns (y (B,H,P), state')."""
+    bsz, h, p, n = state.shape
+    g = B.shape[1]
+    hg = h // g
+    dt = dt.astype(jnp.float32)
+    dec = jnp.exp(dt * A)  # (B,H)
+    Bh = jnp.repeat(B, hg, axis=1).astype(jnp.float32)  # (B,H,N)
+    Ch = jnp.repeat(C, hg, axis=1).astype(jnp.float32)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dt, x.astype(jnp.float32), Bh)
+    state = dec[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x.dtype), state
+
+
+def mamba2_block(cfg, p: Params, x, *, layer_cache=None, chunk: int | None = None):
+    """Full Mamba-2 mixer.
+
+    Training/prefill: layer_cache None (or 'build' via cache arg semantics of
+    callers — here we always return (out, cache_tuple or None)).
+    Decode: layer_cache = (conv_cache (B,W-1,C), state (B,H,P,N), pos).
+    """
+    b, s, d = x.shape
+    d_in = cfg.d_inner
+    h = cfg.ssm_nheads
+    n = cfg.ssm_state_dim
+    g = cfg.ssm_ngroups
+    cdim = conv_dim(cfg)
+
+    z, xBC, dt = _in_projections(cfg, p, x)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])  # (H,)
+
+    if layer_cache is None:
+        xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+        xs, B, C = jnp.split(xBC, [d_in, d_in + g * n], axis=-1)
+        xs = xs.reshape(b, s, h, cfg.ssm_head_dim)
+        B = B.reshape(b, s, g, n)
+        C = C.reshape(b, s, g, n)
+        from repro.models import perf
+
+        cq = min(chunk or perf.current().ssd_chunk, s)
+        while s % cq:
+            cq //= 2
+        y, final = ssd_chunked(xs, dt, A, B, C, chunk=max(cq, 1))
+        y = y + xs * p["ssm_D"].astype(xs.dtype)[None, None, :, None]
+        new_cache = None
+        conv_tail = None
+        if s >= cfg.conv_width - 1:
+            conv_tail = xBC  # caller may slice the tail for cache build
+        y = y.reshape(b, s, d_in)
+    else:
+        conv_cache, state, pos = layer_cache  # (B,W-1,C), (B,H,P,N)
+        win = jnp.concatenate([conv_cache, xBC], axis=1)  # (B,W,C)
+        conv_out = jnp.einsum("bwc,wc->bc", win, p["conv_w"]) + p["conv_b"]
+        xBC_t = jax.nn.silu(conv_out)[:, None, :]  # (B,1,C)
+        xs, B, C = jnp.split(xBC_t[:, 0], [d_in, d_in + g * n], axis=-1)
+        xs = xs.reshape(b, h, cfg.ssm_head_dim)
+        B = B.reshape(b, g, n)
+        C = C.reshape(b, g, n)
+        y, state = ssd_decode_step(state, xs, dt[:, 0], A, B, C)
+        y = y + xs * p["ssm_D"].astype(xs.dtype)[None, :, None]
+        y = y.reshape(b, 1, d_in)
+        new_cache = (win[:, 1:, :], state)
+
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    return shd.shard_hidden(out), new_cache
+
+
+def prefill_mamba_cache(cfg, p: Params, x, dt_unused=None):
+    """Run the block in training mode AND build the decode cache: returns
+    (out, (conv_cache, state))."""
+    b, s, d = x.shape
+    d_in = cfg.d_inner
+    h = cfg.ssm_nheads
+    n = cfg.ssm_state_dim
+    g = cfg.ssm_ngroups
+    cdim = conv_dim(cfg)
+
+    z, xBC_raw, dt = _in_projections(cfg, p, x)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
+    xs, B, C = jnp.split(xBC, [d_in, d_in + g * n], axis=-1)
+    xs = xs.reshape(b, s, h, cfg.ssm_head_dim)
+    B = B.reshape(b, s, g, n)
+    C = C.reshape(b, s, g, n)
+    from repro.models import perf
+
+    cq = min(perf.current().ssd_chunk, s)
+    while s % cq:
+        cq //= 2
+    y, final = ssd_chunked(xs, dt, A, B, C, chunk=max(cq, 1))
+    y = y + xs * p["ssm_D"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(b, s, d_in)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
+    w = cfg.conv_width
+    conv_cache = xBC_raw[:, -(w - 1):, :] if s >= w - 1 else jnp.pad(
+        xBC_raw, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    return shd.shard_hidden(out), (conv_cache, final)

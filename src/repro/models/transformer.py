@@ -1,0 +1,285 @@
+"""Decoder-only transformer stack (dense / MoE / VLM / pure-SSM families).
+
+Layers are stacked along a leading axis and executed with ``jax.lax.scan``
+so the HLO stays O(1) in depth (mandatory for compiling 94/126-layer models
+in the 512-device dry-run, and the production-correct choice anyway).
+Non-uniform prefixes (e.g. DeepSeek's first dense layer) run as plain Python
+loops before the scan.
+
+Modes:
+  train   — causal forward, logits for all positions, no cache
+  prefill — causal forward + returns the decode cache
+  decode  — single-token step against the cache
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import sharding as shd
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import ssm as S
+
+# --------------------------------------------------------------------------
+# per-layer init
+# --------------------------------------------------------------------------
+
+
+def _mixer_kind(cfg) -> str:
+    if cfg.family == "ssm":
+        return "mamba"
+    return cfg.attn_type  # gqa | mla
+
+
+def init_layer(cfg, key, dtype, *, use_moe: bool, d_ff: int | None = None):
+    ks = jax.random.split(key, 3)
+    kind = _mixer_kind(cfg)
+    p: dict = {"ln1": L.init_rms_norm(cfg.d_model, dtype)}
+    if kind == "mamba":
+        p["mamba"] = S.init_mamba2(cfg, ks[0], dtype)
+        return p  # SSM blocks: mixer only, no separate MLP
+    if kind == "mla":
+        p["attn"] = L.init_mla(cfg, ks[0], dtype)
+    else:
+        p["attn"] = L.init_attention(cfg, ks[0], dtype)
+    p["ln2"] = L.init_rms_norm(cfg.d_model, dtype)
+    if use_moe:
+        p["moe"] = M.init_moe(cfg, ks[1], dtype)
+    else:
+        p["mlp"] = L.init_mlp(cfg, ks[1], dtype, d_ff=d_ff)
+    return p
+
+
+def init_params(cfg, key):
+    dtype = jnp.dtype(cfg.dtype)
+    ks = jax.random.split(key, 5)
+    n_first = cfg.first_dense_layers if cfg.is_moe else 0
+    n_scan = cfg.num_layers - n_first
+
+    params: dict = {}
+    params["embed"] = L.embed_init(ks[0], (cfg.vocab_size, cfg.d_model), dtype)
+
+    if n_first:
+        params["first_layers"] = [
+            init_layer(cfg, jax.random.fold_in(ks[1], i), dtype,
+                       use_moe=False, d_ff=cfg.d_ff)
+            for i in range(n_first)
+        ]
+
+    layer_keys = jax.random.split(ks[2], n_scan)
+    params["layers"] = jax.vmap(
+        lambda k: init_layer(cfg, k, dtype, use_moe=cfg.is_moe,
+                             d_ff=cfg.moe_d_ff if cfg.is_moe else cfg.d_ff)
+    )(layer_keys)
+
+    params["final_norm"] = L.init_rms_norm(cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = L.dense_init(ks[3], (cfg.d_model, cfg.vocab_size), dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# block
+# --------------------------------------------------------------------------
+
+
+def block(cfg, p, x, *, positions, mrope_positions=None, mode: str,
+          layer_cache=None, use_moe: bool):
+    """One transformer block.  Returns (x, new_layer_cache, aux_loss)."""
+    kind = _mixer_kind(cfg)
+    aux = jnp.zeros((), jnp.float32)
+    h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
+    if kind == "mamba":
+        if mode == "prefill":
+            out, new_cache = S.prefill_mamba_cache(cfg, p["mamba"], h)
+        else:
+            out, new_cache = S.mamba2_block(cfg, p["mamba"], h,
+                                            layer_cache=layer_cache)
+        return x + out, new_cache, aux
+
+    cache_flag = "build" if mode == "prefill" else None
+    if kind == "mla":
+        out, new_cache = L.mla_attention(cfg, p["attn"], h, positions=positions,
+                                         cache=cache_flag, layer_cache=layer_cache)
+    else:
+        out, new_cache = L.attention(cfg, p["attn"], h, positions=positions,
+                                     cache=cache_flag, layer_cache=layer_cache,
+                                     mrope_positions=mrope_positions)
+    x = x + out
+    h = L.rms_norm(x, p["ln2"]["scale"], cfg.norm_eps)
+    if use_moe:
+        out, aux = M.moe_layer(cfg, p["moe"], h)
+    else:
+        out = L.mlp(cfg, p["mlp"], h)
+    return x + out, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# cache construction
+# --------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_seq: int, dtype=None):
+    """Zero decode cache for the scanned stack (leading L axis) plus any
+    prefix layers and the position counter."""
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_first = cfg.first_dense_layers if cfg.is_moe else 0
+    n_scan = cfg.num_layers - n_first
+    kind = _mixer_kind(cfg)
+
+    def one_layer():
+        if kind == "mamba":
+            return (
+                jnp.zeros((batch, cfg.conv_width - 1, S.conv_dim(cfg)), dtype),
+                jnp.zeros((batch, cfg.ssm_nheads, cfg.ssm_head_dim,
+                           cfg.ssm_state_dim), jnp.float32),
+            )
+        if kind == "mla":
+            return (
+                jnp.zeros((batch, max_seq, cfg.kv_lora_rank), dtype),
+                jnp.zeros((batch, max_seq, cfg.qk_rope_head_dim), dtype),
+            )
+        return (
+            jnp.zeros((batch, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+            jnp.zeros((batch, max_seq, cfg.num_kv_heads, cfg.head_dim), dtype),
+        )
+
+    stack = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_scan, *a.shape)), one_layer())
+    cache = {"layers": stack, "pos": jnp.zeros((batch,), jnp.int32)}
+    if n_first:
+        cache["first_layers"] = [one_layer() for _ in range(n_first)]
+    return cache
+
+
+def _shard_cache(cfg, cache):
+    kind = _mixer_kind(cfg)
+    if kind == "mamba":
+        return cache  # state caches: small, head-sharded via params
+
+    def f(x):
+        # stacked leaves are (L, B, S, ...): shard batch + sequence
+        if x.ndim >= 3:
+            return shd.shard_cache_seq(x, batch_axis=1, seq_axis=2)
+        return x
+
+    cache = dict(cache)
+    cache["layers"] = jax.tree.map(f, cache["layers"])
+    return cache
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+
+def embed_tokens(cfg, params, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return x * 1.0  # keep dtype
+
+
+def unembed(cfg, params, x):
+    table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, table,
+                        preferred_element_type=jnp.float32)
+    return shd.shard_logits(logits)
+
+
+def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
+            remat_policy=None):
+    """batch: dict with 'tokens' (B,S) or 'embeds' (B,S,D); optional
+    'positions' ((B,S) or (3,B,S) for M-RoPE).  Returns (logits, new_cache,
+    aux_loss)."""
+    if cfg.embed_inputs and "embeds" in batch:
+        x = batch["embeds"]
+    else:
+        x = embed_tokens(cfg, params, batch["tokens"])
+    x = shd.shard_hidden(x)
+    b, s, _ = x.shape
+
+    if mode == "decode":
+        pos = cache["pos"]  # (B,)
+        positions = pos[:, None]
+        mrope_positions = batch.get("mrope_positions")  # (3,B,1) or None
+    else:
+        positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
+        mrope_positions = batch.get("mrope_positions")
+    if cfg.rope_theta == 0.0:  # absolute sinusoidal (whisper-style)
+        x = x + L.sinusoidal_positions(positions, cfg.d_model).astype(x.dtype)
+
+    n_first = cfg.first_dense_layers if cfg.is_moe else 0
+    aux_total = jnp.zeros((), jnp.float32)
+    new_cache = {"pos": None} if mode != "train" else None
+
+    # -- prefix (non-scanned) layers ------------------------------------
+    first_caches = []
+    for i in range(n_first):
+        lc = cache["first_layers"][i] + (cache["pos"],) if mode == "decode" else None
+        x, c, aux = block(cfg, params["first_layers"][i], x,
+                          positions=positions, mrope_positions=mrope_positions,
+                          mode=mode, layer_cache=lc, use_moe=False)
+        aux_total += aux
+        first_caches.append(c)
+
+    # -- scanned stack ---------------------------------------------------
+    def body(carry, inp):
+        x, aux_acc = carry
+        if mode == "decode":
+            lp, lc = inp
+            lc = lc + (cache["pos"],)
+        else:
+            lp, lc = inp, None
+        x, c, aux = block(cfg, lp, x, positions=positions,
+                          mrope_positions=mrope_positions, mode=mode,
+                          layer_cache=lc, use_moe=cfg.is_moe)
+        return (x, aux_acc + aux), c
+
+    body_fn = body
+    if remat:
+        body_fn = jax.checkpoint(body, policy=remat_policy)
+
+    xs = (params["layers"], cache["layers"]) if mode == "decode" else params["layers"]
+    (x, aux_total), layer_caches = jax.lax.scan(body_fn, (x, aux_total), xs)
+
+    x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+    logits = unembed(cfg, params, x)
+
+    if mode == "train":
+        return logits, None, aux_total
+    out_cache = {"layers": layer_caches, "pos": None}
+    if n_first:
+        out_cache["first_layers"] = first_caches
+    if mode == "prefill":
+        # lengths: all prompts are full-length here (synthetic serving)
+        out_cache["pos"] = jnp.full((b,), s, jnp.int32)
+        kind = _mixer_kind(cfg)
+        if kind in ("gqa", "mla"):
+            out_cache = _pad_prefill_cache(cfg, out_cache, batch.get("max_seq", s))
+    else:
+        out_cache["pos"] = cache["pos"] + 1
+    return logits, _shard_cache(cfg, out_cache), aux_total
+
+
+def _pad_prefill_cache(cfg, cache, max_seq: int):
+    """Grow prefill caches to max_seq along the sequence axis: axis 2 for
+    the scanned stack (L,B,S,...), axis 1 for unstacked prefix layers
+    (B,S,...)."""
+
+    def pad_axis(axis):
+        def pad(x):
+            if x.ndim > axis and x.shape[axis] < max_seq:
+                pads = [(0, 0)] * x.ndim
+                pads[axis] = (0, max_seq - x.shape[axis])
+                return jnp.pad(x, pads)
+            return x
+
+        return pad
+
+    cache = dict(cache)
+    cache["layers"] = jax.tree.map(pad_axis(2), cache["layers"])
+    if "first_layers" in cache:
+        cache["first_layers"] = jax.tree.map(pad_axis(1), cache["first_layers"])
+    return cache

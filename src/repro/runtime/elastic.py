@@ -1,0 +1,50 @@
+"""Elastic rescale: choose a new mesh when devices are lost, and compute the
+resharding plan for checkpoint restore.
+
+Policy: the model axis is load-bearing (TP/EP weight shards) and is kept
+fixed; failures shrink the DATA axis to the largest size that (a) fits the
+surviving device count and (b) divides the global batch.  This matches how
+large fleets actually degrade: drop whole DP replicas, keep the model
+sharding intact, restore from the latest checkpoint with the new shardings
+(training.checkpoint.restore takes the new sharding tree directly).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+
+@dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+    devices_used: int
+
+    def build(self, devices=None):
+        devices = devices if devices is not None else jax.devices()
+        n = int(np.prod(self.shape))
+        dev = np.asarray(devices[:n]).reshape(self.shape)
+        return jax.sharding.Mesh(dev, self.axes)
+
+
+def plan_after_failure(total_devices: int, *, model: int, global_batch: int,
+                       pod: int = 1) -> MeshPlan:
+    """Largest data axis with data*model*pod <= total_devices, data | batch."""
+    if total_devices < model:
+        raise ValueError(f"cannot keep model axis {model} on {total_devices} devices")
+    max_data = total_devices // (model * pod)
+    data = max_data
+    while data > 1 and (global_batch % data):
+        data -= 1
+    data = max(data, 1)
+    if pod > 1:
+        return MeshPlan((pod, data, model), ("pod", "data", "model"),
+                        pod * data * model)
+    return MeshPlan((data, model), ("data", "model"), data * model)
+
+
+def degraded_throughput_fraction(old: MeshPlan, new: MeshPlan) -> float:
+    return new.devices_used / old.devices_used

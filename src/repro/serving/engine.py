@@ -1,0 +1,163 @@
+"""Serving engine: the paper's GPU server as the dispatch layer of a JAX
+inference runtime.
+
+Architecture (one engine per accelerator / mesh slice):
+
+  client streams ──submit──▶ AcceleratorServer (priority queue, §5.1)
+                                  │ one request at a time (XLA is
+                                  ▼  non-preemptive, like the paper's GPU)
+                          jitted prefill / decode steps
+                                  │
+                  completion ─────┘ clients suspended on Request.wait()
+
+  * Each stream declares (period, deadline, segment WCETs) — an
+    AdmissionController (Eqs (1)-(6)) decides whether the stream fits
+    before it may submit (beyond-paper: the paper's offline test, online).
+  * Straggler mitigation: DeadlineAwarePolicy can bump a stream's priority
+    or the engine can run the server in EDF mode (the paper's future-work
+    FIFO/alternative-ordering discussion).
+  * "GPU segments": a prefill call and each decode call are segments; the
+    CPU-side dispatch cost is the paper's G^m, device time is G^e.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.admission import AdmissionController
+from repro.core.server_runtime import AcceleratorServer
+from repro.core.task_model import GpuSegment, Task
+from repro.models import model as M
+from repro.runtime.straggler import DeadlineAwarePolicy
+from repro.serving.kvcache import PagedKVCacheManager
+
+
+@dataclass
+class StreamSpec:
+    name: str
+    priority: int
+    period_ms: float
+    deadline_ms: float
+    # declared worst-case segment costs for admission (measured or profiled)
+    prefill_ms: float
+    decode_ms: float
+    decode_steps: int  # decode segments per job (period)
+    cpu_ms: float = 0.1
+
+
+@dataclass
+class GenerationResult:
+    tokens: list[int] = field(default_factory=list)
+    prefill_latency_s: float = 0.0
+    decode_latencies_s: list[float] = field(default_factory=list)
+
+
+class ServeEngine:
+    def __init__(self, cfg, params, *, max_seq: int = 128, batch_size: int = 1,
+                 ordering: str = "priority", admission_cores: int = 2,
+                 epsilon_ms: float = 0.05, kv_blocks: int = 0,
+                 kv_block_size: int = 16):
+        self.cfg = cfg
+        self.params = params
+        self.max_seq = max_seq
+        self.batch_size = batch_size
+        self.server = AcceleratorServer(ordering=ordering, name="serve-engine")
+        self.admission = AdmissionController(admission_cores, epsilon_ms=epsilon_ms)
+        self.straggler = DeadlineAwarePolicy()
+        # optional paged-KV accounting: generate() holds block allocations
+        # for its sequence's lifetime; exhaustion rejects the request before
+        # any device work is dispatched (backpressure at the cache, not OOM)
+        self.kv = (PagedKVCacheManager(num_blocks=kv_blocks,
+                                       block_size=kv_block_size)
+                   if kv_blocks else None)
+        self._kv_lock = threading.Lock()
+        self._seq_counter = 0
+        # max_seq must be static inside the trace (it sizes the cache pad)
+        self._prefill = jax.jit(
+            lambda p, b: M.apply(cfg, p, {**b, "max_seq": max_seq},
+                                 mode="prefill"))
+        self._decode = jax.jit(
+            lambda p, b, c: M.apply(cfg, p, b, mode="decode", cache=c))
+        self._streams: dict[str, StreamSpec] = {}
+
+    # -- stream admission (analysis-driven, Eqs (1)-(6)) -------------------
+    def admit(self, spec: StreamSpec):
+        segs = (GpuSegment(e=spec.prefill_ms * 0.9, m=spec.prefill_ms * 0.1),
+                *(GpuSegment(e=spec.decode_ms * 0.9, m=spec.decode_ms * 0.1),)
+                * spec.decode_steps)
+        task = Task(name=spec.name, C=spec.cpu_ms, T=spec.period_ms,
+                    D=spec.deadline_ms, segments=segs, priority=spec.priority)
+        decision = self.admission.try_admit(task)
+        if decision.admitted:
+            self._streams[spec.name] = spec
+            self.straggler.register(spec.name, spec.deadline_ms)
+        return decision
+
+    def remove(self, name: str) -> None:
+        self.admission.remove(name)
+        self._streams.pop(name, None)
+
+    # -- generation ---------------------------------------------------------
+    def generate(self, name: str, prompt: np.ndarray, *, steps: int,
+                 greedy: bool = True) -> GenerationResult:
+        """Run one job of stream ``name``: prefill + ``steps`` decode
+        segments, each arbitrated by the server.  The calling thread
+        suspends between segments (never busy-waits)."""
+        spec = self._streams[name]
+        prio = self.straggler.boost(name, spec.priority)
+        res = GenerationResult()
+        b = prompt.shape[0]
+        batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
+        if self.cfg.family == "encdec":
+            batch["frames"] = jnp.zeros((b, self.cfg.encoder_seq, self.cfg.d_model),
+                                        self.cfg.dtype)
+
+        seq_id = None
+        if self.kv is not None:
+            with self._kv_lock:
+                self._seq_counter += 1
+                seq_id = f"{name}#{self._seq_counter}"
+                # reserve prompt + all decode tokens up front (reject early
+                # rather than stall mid-generation)
+                self.kv.allocate(seq_id, prompt.shape[1])
+                try:
+                    self.kv.extend(seq_id, steps)
+                except Exception:
+                    self.kv.free_seq(seq_id)
+                    raise
+
+        t0 = time.monotonic()
+        req = self.server.submit(
+            lambda: jax.block_until_ready(self._prefill(self.params, batch)),
+            priority=prio, name=f"{name}/prefill")
+        logits, cache, _ = req.wait()
+        res.prefill_latency_s = time.monotonic() - t0
+        self.straggler.observe(name, res.prefill_latency_s * 1e3)
+
+        last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        for i in range(steps):
+            step_batch = {"tokens": last[:, None]}
+            t1 = time.monotonic()
+            req = self.server.submit(
+                lambda sb=step_batch, c=cache: jax.block_until_ready(
+                    self._decode(self.params, sb, c)),
+                priority=prio, name=f"{name}/decode{i}")
+            logits, cache, _ = req.wait()
+            dt = time.monotonic() - t1
+            res.decode_latencies_s.append(dt)
+            self.straggler.observe(name, dt * 1e3)
+            last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            res.tokens.append(int(last[0]))
+        if seq_id is not None:
+            with self._kv_lock:
+                self.kv.free_seq(seq_id)
+        return res
+
+    def close(self) -> None:
+        self.server.shutdown()

@@ -1,0 +1,168 @@
+"""Train-step assembly: loss + remat + AdamW + (optional) DP gradient
+compression, with sharding-aware jit for the production mesh.
+
+``build_train_step`` returns a jitted function
+    (params, opt_state, batch) -> (params, opt_state, metrics)
+with in/out shardings derived from distributed.sharding.param_specs, so the
+same builder serves the CPU smoke tests (mesh=None), the examples, and the
+512-device dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed import sharding as shd
+from repro.models import model as M
+from repro.training import optimizer as opt
+
+REMAT_POLICIES = {
+    "none": None,
+    "dots": jax.checkpoint_policies.checkpoint_dots,
+    "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    "nothing": jax.checkpoint_policies.nothing_saveable,
+    "everything": jax.checkpoint_policies.everything_saveable,
+}
+
+
+@dataclass(frozen=True)
+class TrainSettings:
+    adamw: opt.AdamWConfig = field(default_factory=opt.AdamWConfig)
+    remat: bool = True
+    remat_policy: str = "dots_no_batch"
+    grad_accum: int = 1  # microbatch accumulation steps
+    aux_weight: float = 0.01
+    # beyond-paper §Perf knobs
+    compress_dp_grads: bool = False  # int8+error-feedback DP reduction
+
+
+def make_loss(cfg, settings: TrainSettings):
+    policy = REMAT_POLICIES[settings.remat_policy]
+
+    def loss(params, batch):
+        return M.loss_fn(cfg, params, batch, remat=settings.remat,
+                         remat_policy=policy, aux_weight=settings.aux_weight)
+
+    return loss
+
+
+def _split_microbatches(batch, n: int):
+    def f(x):
+        if hasattr(x, "ndim") and x.ndim >= 1 and x.shape[0] % n == 0:
+            return x.reshape(n, x.shape[0] // n, *x.shape[1:])
+        return None
+    # mrope positions have batch on axis 1: handle dict-wise
+    out = {}
+    for k, v in batch.items():
+        if k == "mrope_positions":
+            out[k] = v.reshape(v.shape[0], n, v.shape[1] // n, *v.shape[2:]).swapaxes(0, 1)
+        elif hasattr(v, "ndim"):
+            out[k] = v.reshape(n, v.shape[0] // n, *v.shape[1:])
+        else:
+            out[k] = v
+    return out
+
+
+def train_step_fn(cfg, settings: TrainSettings):
+    loss_fn = make_loss(cfg, settings)
+
+    def step(params, opt_state, batch):
+        if settings.grad_accum > 1:
+            micro = _split_microbatches(batch, settings.grad_accum)
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                (l, metrics), g = jax.value_and_grad(loss_fn, has_aux=True)(params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, g)
+                return (gacc, lacc + l), None
+
+            zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), _ = jax.lax.scan(acc_body, (zeros, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / settings.grad_accum, gsum)
+            loss = lsum / settings.grad_accum
+            metrics = {}
+        else:
+            (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+                params, batch)
+
+        params, opt_state, opt_metrics = opt.update(
+            grads, opt_state, params, settings.adamw)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return step
+
+
+def batch_specs(cfg, batch_shapes, rules: shd.ShardingRules):
+    """PartitionSpec tree for a train/serve batch: batch dim over DP axes
+    (left unsharded when the batch doesn't divide them, e.g. long_500k's
+    global_batch=1)."""
+    import math
+
+    n_dp = math.prod(rules.mesh.shape[a] for a in rules.batch_axes) \
+        if rules.mesh is not None else 1
+
+    def b_for(size: int):
+        return rules.batch() if size % max(n_dp, 1) == 0 else None
+
+    def spec(path, leaf):
+        name = str(path[-1].key) if path else ""
+        if name == "mrope_positions":  # (3, B, S)
+            return P(None, b_for(leaf.shape[1]), None)
+        if name in ("frames", "embeds"):  # (B, T, D)
+            return P(b_for(leaf.shape[0]), None, None)
+        if leaf.ndim >= 1:
+            return P(b_for(leaf.shape[0]), *([None] * (leaf.ndim - 1)))
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, batch_shapes)
+
+
+def build_train_step(cfg, settings: TrainSettings, rules: shd.ShardingRules | None,
+                     batch_shapes=None):
+    """jit the step.  With rules/mesh: donate + explicit shardings (used by
+    the dry-run and launchers).  Without: plain jit (CPU tests)."""
+    step = train_step_fn(cfg, settings)
+    if rules is None or rules.mesh is None:
+        # no donation on the test/CPU path: callers reuse the input trees
+        return jax.jit(step)
+
+    mesh = rules.mesh
+
+    def wrapped(params, opt_state, batch):
+        with shd.use_rules(rules):
+            return step(params, opt_state, batch)
+
+    params_shape = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                                  jax.random.PRNGKey(0))
+    pspecs = shd.param_specs(params_shape, rules)
+    opt_shape = jax.eval_shape(lambda p: opt.init(p, settings.adamw), params_shape)
+    ospecs = _opt_specs(opt_shape, pspecs)
+    bspecs = batch_specs(cfg, batch_shapes, rules)
+
+    to_named = lambda tree: jax.tree.map(
+        lambda s: NamedSharding(mesh, s), tree,
+        is_leaf=lambda x: isinstance(x, P))
+    metrics_sharding = None  # replicated scalars
+    return jax.jit(
+        wrapped,
+        in_shardings=(to_named(pspecs), to_named(ospecs), to_named(bspecs)),
+        out_shardings=(to_named(pspecs), to_named(ospecs), metrics_sharding),
+        donate_argnums=(0, 1),
+    )
+
+
+def _opt_specs(opt_shape, pspecs):
+    """Optimizer-state specs mirror the param specs leaf-for-leaf."""
+    out = {}
+    for k, sub in opt_shape.items():
+        if k == "step":
+            out[k] = P()
+        else:
+            out[k] = pspecs
+    return out

@@ -1,0 +1,145 @@
+"""Unit tests for the MPCP / FMLP+ baseline analyses and allocation."""
+
+import math
+import random
+
+import pytest
+
+from repro.core import fmlp_analysis, mpcp_analysis
+from repro.core.allocation import SERVER_NAME, allocate
+from repro.core.task_model import GpuSegment, System, Task, server_utilization
+from repro.core.taskset_gen import GenParams, assign_rm_priorities, generate_taskset
+
+
+def _fig2_system() -> System:
+    tau_h = Task("tau_h", C=2, T=100, D=100, priority=3, core=1,
+                 segments=(GpuSegment(e=1.0, m=2.0),))
+    tau_m = Task("tau_m", C=2, T=100, D=100, priority=2, core=1,
+                 segments=(GpuSegment(e=1.0, m=2.0),))
+    tau_l = Task("tau_l", C=2, T=100, D=100, priority=1, core=2,
+                 segments=(GpuSegment(e=2.0, m=2.0),))
+    return System(tasks=[tau_h, tau_m, tau_l], num_cores=3, epsilon=0.0)
+
+
+class TestMPCP:
+    def test_covers_fig2_schedule(self):
+        """The Figure-2 schedule shows tau_h responding in 9; the MPCP bound
+        must be >= 9."""
+        sys_ = _fig2_system()
+        res = mpcp_analysis.analyze(sys_)
+        assert res.wcrt("tau_h") >= 9.0
+        assert res.schedulable
+
+    def test_busy_wait_demand(self):
+        """An isolated GPU task's WCRT includes its full GPU time (busy-wait)."""
+        t = Task("solo", C=1, T=50, D=50, priority=1, core=0,
+                 segments=(GpuSegment(e=2.0, m=0.5),))
+        sys_ = System(tasks=[t], num_cores=1, epsilon=0.0)
+        res = mpcp_analysis.analyze(sys_)
+        assert res.wcrt("solo") == pytest.approx(1 + 2.5)
+
+    def test_remote_blocking_priority_ordered(self):
+        """Lower-priority GPU task waits for hp requests repeatedly."""
+        hp = Task("hp", C=1, T=10, D=10, priority=2, core=0,
+                  segments=(GpuSegment(e=2.0, m=0.0),))
+        lo = Task("lo", C=1, T=40, D=40, priority=1, core=1,
+                  segments=(GpuSegment(e=1.0, m=0.0),))
+        sys_ = System(tasks=[hp, lo], num_cores=2, epsilon=0.0)
+        b = mpcp_analysis.remote_blocking_per_request(sys_, lo, horizon=40)
+        # B0 = 0 (no lp); B1 = (0+1)*2=... iterate: fixpoint of
+        # B = (ceil(B/10)+1)*2 -> B=4: ceil(4/10)+1=2 -> 4 ✓
+        assert b == pytest.approx(4.0)
+
+
+class TestFMLP:
+    def test_covers_fifo_schedule(self):
+        sys_ = _fig2_system()
+        res = fmlp_analysis.analyze(sys_)
+        # simulated FIFO gives tau_h=9, tau_m=11 (test_simulator.py)
+        assert res.wcrt("tau_h") >= 9.0
+        assert res.wcrt("tau_m") >= 11.0
+
+    def test_fifo_blocking_counts_all_other_tasks(self):
+        sys_ = _fig2_system()
+        # tau_h, one request: FIFO bound = max seg of tau_m (3) + tau_l (4) = 7
+        assert fmlp_analysis._fifo_request_driven(sys_, sys_.tasks[0]) == pytest.approx(7.0)
+
+
+class TestAllocation:
+    def test_wfd_balances(self):
+        tasks = [
+            Task("a", C=4, T=10, D=10, priority=4, core=0),
+            Task("b", C=4, T=10, D=10, priority=3, core=0),
+            Task("c", C=1, T=10, D=10, priority=2, core=0),
+            Task("d", C=1, T=10, D=10, priority=1, core=0),
+        ]
+        sys_ = allocate(tasks, 2, approach="sync")
+        by_core = {}
+        for t in sys_.tasks:
+            by_core.setdefault(t.core, []).append(t.name)
+        # WFD: a->0, b->1, c->0/1, d->other
+        assert {frozenset(v) for v in by_core.values()} == {
+            frozenset({"a", "c"}), frozenset({"b", "d"})} or {
+            frozenset(v) for v in by_core.values()} == {
+            frozenset({"a", "d"}), frozenset({"b", "c"})}
+
+    def test_server_is_placed(self):
+        tasks = assign_rm_priorities([
+            Task("g", C=1, T=10, D=10,
+                 segments=(GpuSegment(e=1.0, m=0.2),)),
+            Task("c", C=2, T=20, D=20),
+        ])
+        sys_ = allocate(tasks, 2, approach="server", epsilon=0.05)
+        assert 0 <= sys_.server_core < 2
+        assert sys_.epsilon == 0.05
+
+    def test_packing_util_reflects_approach(self):
+        """Under 'server', a GPU-heavy task packs by C/T only."""
+        g = Task("g", C=0.1, T=10, D=10, priority=1, core=0,
+                 segments=(GpuSegment(e=8.0, m=0.1),))
+        assert g.U > 0.8
+        sys_ = allocate([g], 1, approach="server", epsilon=0.05)
+        assert sys_.tasks[0].core == 0
+
+
+class TestTasksetGen:
+    def test_table2_invariants(self):
+        rng = random.Random(7)
+        params = GenParams(num_cores=4)
+        for _ in range(50):
+            tasks = generate_taskset(params, rng)
+            n = len(tasks)
+            assert 8 <= n <= 20  # [2*4, 5*4]
+            n_gpu = sum(1 for t in tasks if t.uses_gpu)
+            assert 0 <= n_gpu <= round(0.30 * n) + 1
+            for t in tasks:
+                assert 30 <= t.T <= 500
+                assert t.D == t.T
+                assert 0.05 - 1e-9 <= t.U <= 0.2 + 1e-9
+                if t.uses_gpu:
+                    assert 1 <= t.eta <= 3
+                    r = t.G / t.C
+                    assert 0.10 - 1e-9 <= r <= 0.30 + 1e-9
+                    for seg in t.segments:
+                        mr = seg.m / seg.total
+                        assert 0.10 - 1e-6 <= mr <= 0.20 + 1e-6
+            # unique priorities, RM-ordered
+            prios = sorted(tasks, key=lambda t: -t.priority)
+            assert all(prios[i].T <= prios[i + 1].T + 1e-12 for i in range(n - 1))
+
+    def test_bimodal(self):
+        rng = random.Random(3)
+        params = GenParams(num_cores=4, bimodal_large_fraction=1.0)
+        tasks = generate_taskset(params, rng)
+        for t in tasks:
+            assert 0.2 - 1e-9 <= t.U <= 0.5 + 1e-9
+
+    def test_server_utilization_formula(self):
+        eps = 0.05
+        tasks = [
+            Task("a", C=1, T=10, D=10, priority=2, core=0,
+                 segments=(GpuSegment(e=1.0, m=0.5), GpuSegment(e=0.5, m=0.25))),
+            Task("b", C=1, T=20, D=20, priority=1, core=0),
+        ]
+        expected = (0.75 + 2 * 2 * eps) / 10
+        assert server_utilization(tasks, eps) == pytest.approx(expected)

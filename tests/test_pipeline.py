@@ -1,0 +1,84 @@
+"""Pipeline parallelism: the GPipe schedule over a mesh axis must equal the
+sequential layer stack, forward AND backward.  Subprocess (needs >1 host
+device)."""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from jax.sharding import Mesh
+
+    from repro.distributed.pipeline import (bubble_fraction, pipeline_apply,
+                                            stack_stages)
+
+    L, D, MB, BS = 8, 16, 6, 4   # 8 layers, 6 microbatches of 4
+    P_STAGES = 4
+    key = jax.random.PRNGKey(0)
+    ws = jax.random.normal(key, (L, D, D), jnp.float32) * (D ** -0.5)
+    bs = jax.random.normal(jax.random.fold_in(key, 1), (L, D), jnp.float32)
+    x = jax.random.normal(jax.random.fold_in(key, 2), (MB, BS, D), jnp.float32)
+
+    def layer(w, b, h):
+        return jnp.tanh(h @ w + b)
+
+    def sequential(params, xs):
+        def body(h, lp):
+            return layer(lp[0], lp[1], h), None
+        out = []
+        for m in range(xs.shape[0]):
+            h, _ = jax.lax.scan(body, xs[m], params)
+            out.append(h)
+        return jnp.stack(out)
+
+    def stage_fn(sparams, h):
+        def body(hh, lp):
+            return layer(lp[0], lp[1], hh), None
+        h, _ = jax.lax.scan(body, h, sparams)
+        return h
+
+    mesh = Mesh(np.asarray(jax.devices()[:P_STAGES]), ("pipe",))
+    staged = stack_stages((ws, bs), P_STAGES)
+
+    want = sequential((ws, bs), x)
+    got = jax.jit(lambda p, xx: pipeline_apply(
+        stage_fn, p, xx, mesh=mesh, axis="pipe"))(staged, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    print("FWD-OK")
+
+    # backward: gradients through the pipeline == sequential gradients
+    def loss_pipe(p):
+        return jnp.sum(pipeline_apply(stage_fn, p, x, mesh=mesh,
+                                      axis="pipe") ** 2)
+    def loss_seq(p):
+        return jnp.sum(sequential(p, x) ** 2)
+
+    g_pipe = jax.grad(lambda p: loss_pipe(stack_stages(p, P_STAGES)))((ws, bs))
+    g_seq = jax.grad(loss_seq)((ws, bs))
+    for a, b in zip(jax.tree_util.tree_leaves(g_pipe),
+                    jax.tree_util.tree_leaves(g_seq)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-4)
+    print("BWD-OK")
+    assert abs(bubble_fraction(4, 6) - 3/9) < 1e-9
+    print("DONE")
+""")
+
+
+@pytest.mark.slow
+def test_pipeline_matches_sequential():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, env=env, timeout=600,
+                         cwd=os.path.dirname(os.path.dirname(__file__)))
+    assert res.returncode == 0, f"stdout:\n{res.stdout}\nstderr:\n{res.stderr}"
+    assert "FWD-OK" in res.stdout and "BWD-OK" in res.stdout

@@ -1,0 +1,160 @@
+"""Tests for the HLO cost model (analysis/hlo_cost.py) and roofline terms —
+the measurement instrument behind EXPERIMENTS.md §Roofline."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import hlo_cost, roofline
+
+
+def _compile_text(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+class TestHloCost:
+    def test_scan_flops_multiply_by_trip_count(self):
+        """cost_analysis() counts a while body once; our walker must multiply
+        by known_trip_count."""
+
+        def f(x, ws):
+            def body(c, w):
+                return jnp.tanh(c @ w), None
+            y, _ = jax.lax.scan(body, x, ws)
+            return y
+
+        x = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        ws = jax.ShapeDtypeStruct((12, 256, 256), jnp.float32)
+        compiled = jax.jit(f).lower(x, ws).compile()
+        # XLA's own analysis undercounts (body counted once):
+        assert compiled.cost_analysis()["flops"] == pytest.approx(2 * 256**3)
+        cost = hlo_cost.analyze_text(compiled.as_text())
+        assert cost.flops == pytest.approx(12 * 2 * 256**3)
+
+    def test_dot_flops_exact(self):
+        def f(a, b):
+            return a @ b
+
+        a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+        b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+        cost = hlo_cost.analyze_text(_compile_text(f, a, b))
+        assert cost.flops == pytest.approx(2 * 64 * 128 * 32)
+
+    def test_batched_dot_flops(self):
+        def f(a, b):
+            return jnp.einsum("bij,bjk->bik", a, b)
+
+        a = jax.ShapeDtypeStruct((4, 32, 64), jnp.float32)
+        b = jax.ShapeDtypeStruct((4, 64, 16), jnp.float32)
+        cost = hlo_cost.analyze_text(_compile_text(f, a, b))
+        assert cost.flops == pytest.approx(2 * 4 * 32 * 64 * 16)
+
+    def test_memory_counts_weights_once_per_iteration(self):
+        def f(x, ws):
+            def body(c, w):
+                return c @ w, None
+            return jax.lax.scan(body, x, ws)[0]
+
+        n, L = 128, 6
+        x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+        ws = jax.ShapeDtypeStruct((L, n, n), jnp.float32)
+        cost = hlo_cost.analyze_text(_compile_text(f, x, ws))
+        w_bytes = n * n * 4
+        # per iteration: weight slice read (2x in the cost model: slice
+        # in+out) + dot operands/result (3x) + carry copies.  Must be
+        # O(L * w_bytes), far from L * full-stack reads.
+        assert cost.hbm_bytes < 16 * L * w_bytes
+        assert cost.hbm_bytes > 2 * L * w_bytes
+
+    def test_parse_handles_index_comments(self):
+        """Big tuple types carry /*index=N*/ comments that must not break
+        instruction parsing (regression: while loops were silently skipped)."""
+        txt = """
+HloModule m, entry_computation_layout={()->f32[2]{0}}
+
+%body (p: (s32[], f32[2])) -> (s32[], f32[2]) {
+  %p = (s32[], /*index=1*/f32[2]{0}) parameter(0)
+  %g0 = s32[] get-tuple-element(%p), index=0
+  %g1 = f32[2]{0} get-tuple-element(%p), index=1
+  %c1 = s32[] constant(1)
+  %a = s32[] add(%g0, %c1)
+  %m = f32[2]{0} multiply(%g1, %g1)
+  ROOT %t = (s32[], /*index=1*/f32[2]{0}) tuple(%a, %m)
+}
+
+%cond (p2: (s32[], f32[2])) -> pred[] {
+  %p2 = (s32[], /*index=1*/f32[2]{0}) parameter(0)
+  %g = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(5)
+  ROOT %lt = pred[] compare(%g, %c), direction=LT
+}
+
+ENTRY %main () -> f32[2] {
+  %z = f32[2]{0} constant({1, 2})
+  %zi = s32[] constant(0)
+  %t0 = (s32[], /*index=1*/f32[2]{0}) tuple(%zi, %z)
+  %w = (s32[], /*index=1*/f32[2]{0}) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"5"}}
+  ROOT %out = f32[2]{0} get-tuple-element(%w), index=1
+}
+"""
+        comps, entry = hlo_cost.parse_module(txt)
+        assert "body" in comps and "cond" in comps
+        cost = hlo_cost.analyze_text(txt)
+        # 5 iterations x [multiply f32[2]: 3*8 B, counter add s32: 3*4 B,
+        # cond compare: 4+4+1 B] = 5 * (24 + 12 + 9) = 225
+        assert cost.hbm_bytes == pytest.approx(5 * (24 + 12 + 9))
+
+
+class TestCollectiveParsing:
+    def test_psum_bytes(self):
+        """all-reduce result bytes x trips, via shard_map on 1 device."""
+        txt = """
+HloModule m
+
+ENTRY %main (x: f32[1024]) -> f32[1024] {
+  %x = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%x), replica_groups={}, to_apply=%add
+}
+"""
+        cost = hlo_cost.analyze_text(txt)
+        assert cost.collective_bytes["all-reduce"] == pytest.approx(4096)
+        assert cost.collective_counts["all-reduce"] == 1
+
+    def test_async_start_done_counted_once(self):
+        txt = """
+HloModule m
+
+ENTRY %main (x: f32[256]) -> f32[512] {
+  %x = f32[256]{0} parameter(0)
+  %ags = (f32[256]{0}, f32[512]{0}) all-gather-start(%x), dimensions={0}
+  ROOT %agd = f32[512]{0} all-gather-done(%ags)
+}
+"""
+        cost = hlo_cost.analyze_text(txt)
+        assert cost.collective_counts["all-gather"] == 1
+        # result tuple of -start includes in+out buffers; we charge its bytes
+        assert cost.collective_bytes["all-gather"] > 0
+
+
+class TestRooflineTerms:
+    def test_bottleneck_and_fraction(self):
+        cost = {"flops": 0.0, "bytes accessed": 0.0}
+        txt = """
+HloModule m
+
+ENTRY %main (a: bf16[4096,4096], b: bf16[4096,4096]) -> bf16[4096,4096] {
+  %a = bf16[4096,4096]{1,0} parameter(0)
+  %b = bf16[4096,4096]{1,0} parameter(1)
+  ROOT %d = bf16[4096,4096]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+        terms = roofline.analyze(cost, txt, chips=1, model_flops=2 * 4096**3)
+        assert terms.compute_ms == pytest.approx(
+            2 * 4096**3 / roofline.PEAK_FLOPS * 1e3)
+        assert terms.memory_ms == pytest.approx(
+            3 * 4096 * 4096 * 2 / roofline.HBM_BW * 1e3)
+        assert terms.collective_ms == 0.0
+        assert terms.bottleneck == "compute"  # AI = 683 >> 240 ridge point
+        assert terms.roofline_fraction == 1.0
+        assert terms.model_flops_ratio == pytest.approx(1.0)

@@ -1,0 +1,137 @@
+"""Unit tests for the server-based analysis (paper §5.2) including the
+worked example of Figures 2/4."""
+
+import math
+
+import pytest
+
+from repro.core import server_analysis as sa
+from repro.core.task_model import GpuSegment, System, Task, server_utilization
+
+
+def _example_system(eps: float) -> System:
+    """The Figure 2/4 taskset: tau_h, tau_m on core 1 (with the server),
+    tau_l on core 2.  One GPU segment each, between two 1-unit normal chunks.
+    Segment lengths: 4 (tau_l), 3 (tau_h), 3 (tau_m)."""
+    tau_h = Task("tau_h", C=2, T=100, D=100, priority=3, core=1,
+                 segments=(GpuSegment(e=1.0, m=2.0),))
+    tau_m = Task("tau_m", C=2, T=100, D=100, priority=2, core=1,
+                 segments=(GpuSegment(e=1.0, m=2.0),))
+    tau_l = Task("tau_l", C=2, T=100, D=100, priority=1, core=2,
+                 segments=(GpuSegment(e=2.0, m=2.0),))
+    return System(tasks=[tau_h, tau_m, tau_l], num_cores=3, epsilon=eps, server_core=1)
+
+
+class TestRequestDriven:
+    def test_no_gpu_task(self):
+        sys_ = _example_system(0.05)
+        t = Task("cpu_only", C=1, T=10, D=10, priority=0, core=0)
+        sys2 = System(tasks=[*sys_.tasks, t], num_cores=3, epsilon=0.05, server_core=1)
+        assert sa.request_driven_bound(sys2, t, horizon=10) == 0.0
+
+    def test_highest_priority(self):
+        """For the highest-priority task: only the longest lower-priority
+        segment blocks (non-preemptive GPU), once, plus one eps."""
+        eps = 0.05
+        sys_ = _example_system(eps)
+        tau_h = sys_.tasks[0]
+        # lp segments: 3 (tau_m), 4 (tau_l) -> max 4; +eps
+        assert sa.request_driven_bound(sys_, tau_h, horizon=100) == pytest.approx(4 + eps)
+
+    def test_lowest_priority_includes_hp_carry_in(self):
+        eps = 0.0
+        sys_ = _example_system(eps)
+        tau_l = sys_.tasks[2]
+        # no lower-priority tasks -> first term 0; hp = tau_h, tau_m with one
+        # segment each, periods 100.  B0 = 0; B1 = (ceil(0/100)+1)*3 * 2 = 6;
+        # B2 = (ceil(6/100)+1)*3*2 = 12; B3 = 12 (fixpoint: ceil(12/100)=1).
+        assert sa.request_driven_bound(sys_, tau_l, horizon=100) == pytest.approx(12.0)
+
+    def test_divergence_returns_inf(self):
+        # hp GPU demand exceeding the GPU's capacity -> diverges
+        hp = Task("hp", C=0.1, T=1.5, D=1.5, priority=2, core=0,
+                  segments=(GpuSegment(e=1.5, m=0.2),))
+        lo = Task("lo", C=0.1, T=50, D=50, priority=1, core=0,
+                  segments=(GpuSegment(e=1.0, m=0.1),))
+        sys_ = System(tasks=[hp, lo], num_cores=2, epsilon=0.05, server_core=1)
+        assert math.isinf(sa.request_driven_bound(sys_, lo, horizon=50))
+
+
+class TestJobDriven:
+    def test_formula(self):
+        eps = 0.05
+        sys_ = _example_system(eps)
+        tau_m = sys_.tasks[1]
+        # eta=1; lp max = 4+eps (tau_l); hp tau_h: (ceil(W/100)+1)*(3+eps)
+        W = 10.0
+        expected = (4 + eps) + (1 + 1) * (3 + eps)
+        assert sa.job_driven_bound(sys_, tau_m, W) == pytest.approx(expected)
+
+    def test_double_bound_takes_min(self):
+        eps = 0.0
+        sys_ = _example_system(eps)
+        tau_l = sys_.tasks[2]
+        rd = sa.request_driven_bound(sys_, tau_l, horizon=100)  # 12
+        jd = sa.job_driven_bound(sys_, tau_l, 5.0)  # 0 + 2*(3+3) = ... per-task
+        assert sa.waiting_bound(sys_, tau_l, 5.0, horizon=100) == pytest.approx(min(rd, jd))
+
+
+class TestGpuHandling:
+    def test_isolated_task(self):
+        """A GPU task alone: B^w = 0, so B^gpu = G + 2*eta*eps (Lemma 2)."""
+        eps = 0.05
+        t = Task("solo", C=1, T=50, D=50, priority=1, core=0,
+                 segments=(GpuSegment(e=2.0, m=0.5), GpuSegment(e=1.0, m=0.5)))
+        sys_ = System(tasks=[t], num_cores=2, epsilon=eps, server_core=1)
+        expected = t.G + 2 * 2 * eps
+        assert sa.gpu_handling_time(sys_, t, 10.0, horizon=50) == pytest.approx(expected)
+        # and the response time: C + B^gpu (no interference anywhere)
+        res = sa.analyze(sys_)
+        assert res.wcrt("solo") == pytest.approx(1 + expected)
+        assert res.schedulable
+
+
+class TestWorkedExample:
+    """Figure 2/4 example: the server-based bound must cover the simulated
+    6+4eps and stay meaningfully below the MPCP busy-wait response of 9+."""
+
+    def test_tau_h_bound(self):
+        eps = 0.05
+        sys_ = _example_system(eps)
+        res = sa.analyze(sys_)
+        w_h = res.wcrt("tau_h")
+        # Hand computation of Eq (6): C=2; B^w = B^rd = 4+eps (longest lp
+        # segment); B^gpu = (4+eps) + 3 + 2*eps = 7.15.  Server interference:
+        # tau_m and tau_l each contribute exec = G^m + 2*eta*eps = 2.1 with
+        # jitter D - exec = 97.9, so for W in (2.1, 102.1]:
+        # ceil((W+97.9)/100)=2 -> 4.2 each.  Fixpoint: 2 + 7.15 + 8.4 = 17.55.
+        assert w_h >= 6 + 4 * eps  # must cover the example's actual schedule
+        assert w_h == pytest.approx(17.55)
+        assert res.schedulable
+
+    def test_server_utilization_eq8(self):
+        eps = 0.05
+        sys_ = _example_system(eps)
+        # each task: G^m = 2, eta = 1, T = 100
+        expected = sum((2 + 2 * eps) / 100 for _ in range(3))
+        assert server_utilization(sys_.tasks, eps) == pytest.approx(expected)
+
+
+class TestAnalyzeOrdering:
+    def test_uses_hp_response_for_jitter(self):
+        eps = 0.0
+        hp = Task("hp", C=2, T=10, D=10, priority=2, core=0)
+        lo = Task("lo", C=3, T=30, D=30, priority=1, core=0)
+        sys_ = System(tasks=[hp, lo], num_cores=1, epsilon=eps, server_core=0)
+        res = sa.analyze(sys_)
+        assert res.wcrt("hp") == pytest.approx(2.0)
+        # lo: W = 3 + ceil((W + (2-2))/10)*2 -> W = 3+2 = 5 (one hp job)
+        assert res.wcrt("lo") == pytest.approx(5.0)
+
+    def test_unschedulable_flag(self):
+        hp = Task("hp", C=6, T=10, D=10, priority=2, core=0)
+        lo = Task("lo", C=6, T=12, D=12, priority=1, core=0)
+        sys_ = System(tasks=[hp, lo], num_cores=1, epsilon=0.0, server_core=0)
+        res = sa.analyze(sys_)
+        assert not res.schedulable
+        assert math.isinf(res.wcrt("lo"))

@@ -1,0 +1,183 @@
+"""Tests for the executable AcceleratorServer (threads) and admission control."""
+
+import threading
+import time
+
+import pytest
+
+from repro.core.admission import AdmissionController
+from repro.core.server_runtime import AcceleratorServer
+from repro.core.task_model import GpuSegment, Task
+
+
+class TestAcceleratorServer:
+    def test_basic_roundtrip(self):
+        with AcceleratorServer() as srv:
+            assert srv.call(lambda: 41 + 1) == 42
+
+    def test_priority_ordering(self):
+        """With the server busy, queued requests complete in priority order."""
+        order = []
+        gate = threading.Event()
+        with AcceleratorServer(ordering="priority") as srv:
+            srv.submit(lambda: gate.wait(5.0), name="blocker")
+            time.sleep(0.05)  # let the blocker start
+            reqs = [
+                srv.submit(lambda i=i: order.append(i), priority=i, name=f"r{i}")
+                for i in (1, 3, 2)
+            ]
+            gate.set()
+            for r in reqs:
+                r.wait(timeout=5.0)
+        assert order == [3, 2, 1]
+
+    def test_fifo_ordering(self):
+        order = []
+        gate = threading.Event()
+        with AcceleratorServer(ordering="fifo") as srv:
+            srv.submit(lambda: gate.wait(5.0))
+            time.sleep(0.05)
+            reqs = [
+                srv.submit(lambda i=i: order.append(i), priority=i)
+                for i in (1, 3, 2)
+            ]
+            gate.set()
+            for r in reqs:
+                r.wait(timeout=5.0)
+        assert order == [1, 3, 2]
+
+    def test_edf_ordering(self):
+        order = []
+        gate = threading.Event()
+        now = time.monotonic()
+        with AcceleratorServer(ordering="edf") as srv:
+            srv.submit(lambda: gate.wait(5.0))
+            time.sleep(0.05)
+            reqs = [
+                srv.submit(lambda d=d: order.append(d), deadline=now + d)
+                for d in (3.0, 1.0, 2.0)
+            ]
+            gate.set()
+            for r in reqs:
+                r.wait(timeout=5.0)
+        assert order == [1.0, 2.0, 3.0]
+
+    def test_client_suspends_not_busy_waits(self):
+        """wait() must block on an Event (suspension), not consume the result
+        before completion."""
+        with AcceleratorServer() as srv:
+            req = srv.submit(lambda: (time.sleep(0.1), "done")[1])
+            assert not req.done
+            assert req.wait(timeout=5.0) == "done"
+            assert req.done
+
+    def test_error_propagates(self):
+        with AcceleratorServer() as srv:
+            req = srv.submit(lambda: 1 / 0)
+            with pytest.raises(ZeroDivisionError):
+                req.wait(timeout=5.0)
+
+    def test_nonpreemptive_single_flight(self):
+        """The accelerator executes one request at a time."""
+        active = []
+        peak = []
+
+        def work():
+            active.append(1)
+            peak.append(len(active))
+            time.sleep(0.01)
+            active.pop()
+
+        with AcceleratorServer() as srv:
+            reqs = [srv.submit(work) for _ in range(8)]
+            for r in reqs:
+                r.wait(timeout=10.0)
+        assert max(peak) == 1
+
+    def test_stats_and_waiting_time(self):
+        with AcceleratorServer() as srv:
+            req = srv.submit(lambda: None)
+            req.wait(timeout=5.0)
+            assert req.waiting_time >= 0
+            assert req.handling_time >= req.waiting_time
+            assert srv.stats.completed == 1
+
+
+class TestAdmission:
+    def test_admits_light_and_rejects_overload(self):
+        ac = AdmissionController(num_cores=2, epsilon_ms=0.05)
+        light = Task("s1", C=1, T=100, D=100,
+                     segments=(GpuSegment(e=5.0, m=0.5),))
+        assert ac.try_admit(light).admitted
+        # a stream whose GPU demand alone saturates the accelerator
+        heavy = Task("s2", C=1, T=10, D=10,
+                     segments=(GpuSegment(e=9.5, m=0.4),))
+        decision = ac.try_admit(heavy)
+        assert not decision.admitted
+        # rejected stream must not linger
+        assert [t.name for t in ac.streams] == ["s1"]
+
+    def test_duplicate_rejected(self):
+        ac = AdmissionController(num_cores=2)
+        t = Task("s1", C=1, T=100, D=100)
+        assert ac.try_admit(t).admitted
+        assert not ac.try_admit(t).admitted
+
+    def test_remove_then_admit(self):
+        ac = AdmissionController(num_cores=2)
+        t1 = Task("s1", C=1, T=10, D=10, segments=(GpuSegment(e=8.0, m=0.2),))
+        t2 = Task("s2", C=1, T=10, D=10, segments=(GpuSegment(e=8.0, m=0.2),))
+        assert ac.try_admit(t1).admitted
+        assert not ac.try_admit(t2).admitted
+        ac.remove("s1")
+        assert ac.try_admit(t2).admitted
+
+
+class TestMultiPodAdmission:
+    def test_spills_to_second_pod(self):
+        from repro.core.admission import MultiPodAdmission
+
+        mp = MultiPodAdmission(num_pods=2)
+        # each stream takes ~60% of one accelerator: two must split pods
+        s1 = Task("s1", C=0.5, T=100, D=100, segments=(GpuSegment(e=60, m=1),))
+        s2 = Task("s2", C=0.5, T=100, D=100, segments=(GpuSegment(e=60, m=1),))
+        s3 = Task("s3", C=0.5, T=100, D=100, segments=(GpuSegment(e=60, m=1),))
+        d1, p1 = mp.try_admit(s1)
+        d2, p2 = mp.try_admit(s2)
+        assert d1.admitted and d2.admitted
+        assert p1 != p2  # worst-fit spreads load
+        d3, p3 = mp.try_admit(s3)
+        assert not d3.admitted and p3 == -1  # both accelerators saturated
+
+    def test_remove_frees_pod(self):
+        from repro.core.admission import MultiPodAdmission
+
+        mp = MultiPodAdmission(num_pods=1)
+        t = Task("t", C=0.5, T=100, D=100, segments=(GpuSegment(e=60, m=1),))
+        u = Task("u", C=0.5, T=100, D=100, segments=(GpuSegment(e=60, m=1),))
+        assert mp.try_admit(t)[0].admitted
+        assert not mp.try_admit(u)[0].admitted
+        mp.remove("t")
+        assert mp.try_admit(u)[0].admitted
+
+
+class TestFifoServerAnalysis:
+    def test_bound_covers_fifo_simulation(self):
+        import random
+
+        from repro.core import server_analysis, simulator
+        from repro.core.allocation import allocate
+        from repro.core.taskset_gen import GenParams, generate_taskset
+
+        rng = random.Random(11)
+        for _ in range(20):
+            tasks = generate_taskset(GenParams(num_cores=2, num_tasks=(3, 6)), rng)
+            system = allocate(tasks, 2, approach="server", epsilon=0.05)
+            res = server_analysis.analyze_fifo_server(system)
+            sim = simulator.simulate(system, mode="server_fifo",
+                                     horizon_ms=3 * max(t.T for t in tasks))
+            for t in system.tasks:
+                bound = res.response_times[t.name]
+                import math
+                if not math.isinf(bound):
+                    assert sim.wcrt(t.name) <= bound + 1e-3, t.name

@@ -1,0 +1,99 @@
+"""Sharding-rule invariants, checked against the FULL configs (via
+eval_shape — no allocation): every sharded dimension must divide the mesh
+axis it is mapped to, for params, batches, and decode caches.  These are
+the invariants that make the 512-device dry-run compile."""
+
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.registry import ARCH_IDS, SHAPES, get_config, shapes_for
+from repro.distributed import sharding as shd
+from repro.launch.steps import cache_pspecs
+from repro.models import model as M
+from repro.training.train_step import batch_specs
+
+
+class _FakeMesh:
+    """Stands in for the 256-chip mesh (shape lookups only)."""
+
+    shape = {"data": 16, "model": 16}
+
+
+RULES = shd.ShardingRules(mesh=_FakeMesh(), batch_axes=("data",), fsdp=True)
+
+
+def _axis_size(name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, (tuple, list)):
+        out = 1
+        for n in name:
+            out *= _FakeMesh.shape[n]
+        return out
+    return _FakeMesh.shape[name]
+
+
+def _check_tree(shapes_tree, specs_tree, what: str):
+    leaves_s, _ = jax.tree_util.tree_flatten(shapes_tree)
+    leaves_p = jax.tree_util.tree_flatten(
+        specs_tree, is_leaf=lambda x: isinstance(x, P))[0]
+    assert len(leaves_s) == len(leaves_p), what
+    for arr, spec in zip(leaves_s, leaves_p):
+        assert isinstance(spec, P), (what, spec)
+        for i, name in enumerate(spec):
+            size = _axis_size(name)
+            assert arr.shape[i] % size == 0, (
+                f"{what}: dim {i} of {arr.shape} not divisible by "
+                f"{name} ({size})")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_param_specs_divisible(arch):
+    cfg = get_config(arch)
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = shd.param_specs(shapes, RULES)
+    _check_tree(shapes, specs, f"{arch} params")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_batch_specs_divisible(arch):
+    cfg = get_config(arch)
+    for shape in shapes_for(cfg):
+        batch = M.input_specs(cfg, shape)
+        specs = batch_specs(cfg, batch, RULES)
+        _check_tree(batch, specs, f"{arch} {shape.name} batch")
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_specs_divisible(arch):
+    cfg = get_config(arch)
+    for shape in shapes_for(cfg):
+        if shape.kind != "decode":
+            continue
+        cache = jax.eval_shape(
+            lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+        specs = cache_pspecs(cache, RULES, batch=shape.global_batch,
+                             seq=shape.seq_len)
+        _check_tree(cache, specs, f"{arch} {shape.name} cache")
+
+
+@pytest.mark.parametrize("arch", ["llama3_405b", "qwen3_moe_235b_a22b"])
+def test_expert_and_serve2d_layouts(arch):
+    """The §Perf layouts must keep divisibility too."""
+    import dataclasses
+
+    cfg = get_config(arch)
+    rules = dataclasses.replace(RULES, expert_ff_fsdp=True, shard_batch=False,
+                                seq_axes=("data", "model"))
+    shapes = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    specs = shd.param_specs(shapes, rules)
+    _check_tree(shapes, specs, f"{arch} serve2d params")
+    shape = SHAPES["decode_32k"]
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, shape.global_batch, shape.seq_len))
+    specs = cache_pspecs(cache, rules, batch=shape.global_batch,
+                         seq=shape.seq_len)
+    _check_tree(cache, specs, f"{arch} serve2d cache")

@@ -1,0 +1,109 @@
+"""Simulator semantics tests, including the paper's Figure 2 / Figure 4
+worked example reproduced event-for-event."""
+
+import pytest
+
+from repro.core import simulator
+from repro.core.task_model import GpuSegment, System, Task
+
+
+def _example_system(eps: float) -> System:
+    tau_h = Task("tau_h", C=2, T=100, D=100, priority=3, core=1,
+                 segments=(GpuSegment(e=1.0, m=2.0),))
+    tau_m = Task("tau_m", C=2, T=100, D=100, priority=2, core=1,
+                 segments=(GpuSegment(e=1.0, m=2.0),))
+    tau_l = Task("tau_l", C=2, T=100, D=100, priority=1, core=2,
+                 segments=(GpuSegment(e=2.0, m=2.0),))
+    return System(tasks=[tau_h, tau_m, tau_l], num_cores=3, epsilon=eps, server_core=1)
+
+
+OFFSETS = {"tau_l": 0.0, "tau_m": 2.0, "tau_h": 3.0}
+SPLITS = {t: [1.0, 1.0] for t in OFFSETS}
+
+
+class TestFigure2_MPCP:
+    def test_response_times(self):
+        """Figure 2: tau_h's response time is exactly 9 under MPCP."""
+        sys_ = _example_system(0.0)
+        res = simulator.simulate(sys_, mode="mpcp", horizon_ms=50,
+                                 splits=SPLITS, offsets=OFFSETS)
+        assert res.wcrt("tau_h") == pytest.approx(9.0, abs=1e-6)
+        # tau_l holds the GPU first (requests at t=1, free): gcs [1,5],
+        # finishes chunk2 [5,6] -> RT 6
+        assert res.wcrt("tau_l") == pytest.approx(6.0, abs=1e-6)
+        # tau_m: acquires at 8, gcs [8,11], chunk2 [12,13] after tau_h's
+        # chunk2 [11,12] (tau_h has higher priority) -> RT 11
+        assert res.wcrt("tau_m") == pytest.approx(11.0, abs=1e-6)
+
+    def test_fifo_changes_grant_order(self):
+        """Under FMLP+ (FIFO), tau_m requested before tau_h, so tau_m is
+        granted first."""
+        sys_ = _example_system(0.0)
+        res = simulator.simulate(sys_, mode="fmlp", horizon_ms=50,
+                                 splits=SPLITS, offsets=OFFSETS)
+        # tau_m: gcs [5,8]; tau_h: gcs [8,11] (boosted, preempts tau_m's
+        # chunk2), tau_h chunk2 [11,12], tau_m chunk2 [12,13] -> RT 11
+        assert res.wcrt("tau_h") == pytest.approx(9.0, abs=1e-6)
+        assert res.wcrt("tau_m") == pytest.approx(11.0, abs=1e-6)
+
+
+class TestFigure4_Server:
+    def test_response_time_6_plus_4eps(self):
+        """Figure 4: tau_h's response time is exactly 6 + 4*eps under the
+        server approach.  The example's GPU segments carry two misc
+        sub-segments of ~eps each (m = 2*eps), so the 4 eps delays to tau_h
+        are: receive of tau_m's request at t=3; notify-tau_l before tau_h's
+        segment start (5+2eps); notify-tau_h (8+3eps); and the first misc
+        sub-segment of tau_m's chained segment (8+4eps)."""
+        eps = 0.05
+        m = 2 * eps
+        tau_h = Task("tau_h", C=2, T=100, D=100, priority=3, core=1,
+                     segments=(GpuSegment(e=3.0 - m, m=m),))
+        tau_m = Task("tau_m", C=2, T=100, D=100, priority=2, core=1,
+                     segments=(GpuSegment(e=3.0 - m, m=m),))
+        tau_l = Task("tau_l", C=2, T=100, D=100, priority=1, core=2,
+                     segments=(GpuSegment(e=4.0 - m, m=m),))
+        sys_ = System(tasks=[tau_h, tau_m, tau_l], num_cores=3,
+                      epsilon=eps, server_core=1)
+        res = simulator.simulate(sys_, mode="server", horizon_ms=60,
+                                 splits=SPLITS, offsets=OFFSETS)
+        assert res.wcrt("tau_h") == pytest.approx(6 + 4 * eps, abs=1e-6)
+
+    def test_small_eps_beats_mpcp(self):
+        """The paper's conclusion for this taskset: server beats sync if
+        eps < 3/4."""
+        eps = 0.05
+        sys_ = _example_system(eps)
+        r_server = simulator.simulate(sys_, mode="server", horizon_ms=60,
+                                      splits=SPLITS, offsets=OFFSETS)
+        sys0 = _example_system(0.0)
+        r_mpcp = simulator.simulate(sys0, mode="mpcp", horizon_ms=60,
+                                    splits=SPLITS, offsets=OFFSETS)
+        assert r_server.wcrt("tau_h") < r_mpcp.wcrt("tau_h")
+
+    def test_client_does_not_consume_cpu_during_gpu(self):
+        """Server mode: while tau_l's segment runs on the GPU, core 2 must be
+        free (tau_l suspended) — verified via the execution trace."""
+        eps = 0.05
+        sys_ = _example_system(eps)
+        res = simulator.simulate(sys_, mode="server", horizon_ms=60, trace=True,
+                                 splits=SPLITS, offsets=OFFSETS)
+        core2_busy = sum(s.end_ms - s.start_ms for s in res.trace if s.core == 2)
+        assert core2_busy == pytest.approx(2.0, abs=1e-6)  # just tau_l's C
+
+    def test_mpcp_busy_waits(self):
+        sys_ = _example_system(0.0)
+        res = simulator.simulate(sys_, mode="mpcp", horizon_ms=60, trace=True,
+                                 splits=SPLITS, offsets=OFFSETS)
+        core2_busy = sum(s.end_ms - s.start_ms for s in res.trace if s.core == 2)
+        assert core2_busy == pytest.approx(2.0 + 4.0, abs=1e-6)  # C + busy-wait G
+
+
+class TestPeriodicReleases:
+    def test_multiple_jobs(self):
+        t = Task("t", C=1, T=10, D=10, priority=1, core=0,
+                 segments=(GpuSegment(e=1.0, m=0.2),))
+        sys_ = System(tasks=[t], num_cores=2, epsilon=0.05, server_core=1)
+        res = simulator.simulate(sys_, mode="server", horizon_ms=100)
+        assert len(res.response_times["t"]) == 10
+        assert not res.any_miss

@@ -1,0 +1,192 @@
+"""Training substrate tests: optimizer, train step, checkpointing, data
+pipeline, gradient compression."""
+
+import math
+import pathlib
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.registry import get_config
+from repro.data.pipeline import DataConfig, Prefetcher, SyntheticLM
+from repro.models import model as M
+from repro.training import checkpoint as ckpt
+from repro.training import grad_compress as gc
+from repro.training import optimizer as opt
+from repro.training.train_step import TrainSettings, build_train_step
+
+
+@pytest.fixture(scope="module")
+def tiny():
+    cfg = get_config("internlm2_1_8b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _data(cfg, b=4, s=16, step=0):
+    src = SyntheticLM(DataConfig(cfg.vocab_size, s, b))
+    return {k: jnp.asarray(v) for k, v in src.batch(step).items()}
+
+
+class TestOptimizer:
+    def test_schedule_warmup_and_decay(self):
+        c = opt.AdamWConfig(lr=1.0, warmup_steps=10, total_steps=100,
+                            min_lr_ratio=0.1)
+        assert float(opt.schedule(c, jnp.asarray(5))) == pytest.approx(0.5)
+        assert float(opt.schedule(c, jnp.asarray(10))) == pytest.approx(1.0, abs=1e-2)
+        assert float(opt.schedule(c, jnp.asarray(100))) == pytest.approx(0.1, abs=1e-3)
+
+    def test_update_decreases_loss(self, tiny):
+        cfg, params = tiny
+        c = opt.AdamWConfig(lr=1e-2, warmup_steps=0, total_steps=100,
+                            weight_decay=0.0)
+        state = opt.init(params, c)
+        batch = _data(cfg)
+
+        def loss(p):
+            return M.loss_fn(cfg, p, batch, remat=False)[0]
+
+        l0 = float(loss(params))
+        for _ in range(5):
+            l, g = jax.value_and_grad(loss)(params)
+            params, state, _ = opt.update(g, state, params, c)
+        assert float(loss(params)) < l0
+
+    def test_moment_dtype_and_master(self, tiny):
+        cfg, params = tiny
+        c = opt.AdamWConfig(moment_dtype="bfloat16", master_dtype="float32")
+        state = opt.init(params, c)
+        assert all(l.dtype == jnp.bfloat16 for l in jax.tree.leaves(state["mu"]))
+        assert all(l.dtype == jnp.float32 for l in jax.tree.leaves(state["master"]))
+
+    def test_grad_clip(self, tiny):
+        cfg, params = tiny
+        c = opt.AdamWConfig(grad_clip=1e-9, lr=1.0, warmup_steps=0)
+        state = opt.init(params, c)
+        grads = jax.tree.map(lambda p: jnp.ones_like(p), params)
+        new_params, _, m = opt.update(grads, state, params, c)
+        # clip to ~0 -> params ~unchanged apart from weight decay
+        diff = max(float(jnp.max(jnp.abs(a.astype(jnp.float32) -
+                                         b.astype(jnp.float32))))
+                   for a, b in zip(jax.tree.leaves(new_params),
+                                   jax.tree.leaves(params)))
+        assert diff < 0.2  # weight-decay-only scale
+        assert float(m["grad_norm"]) > 0
+
+
+class TestTrainStep:
+    def test_end_to_end_steps(self, tiny):
+        cfg, params = tiny
+        settings = TrainSettings(adamw=opt.AdamWConfig(lr=1e-3, warmup_steps=0))
+        step = build_train_step(cfg, settings, None)
+        state = opt.init(params, settings.adamw)
+        losses = []
+        for i in range(3):
+            params, state, metrics = step(params, state, _data(cfg, step=i))
+            losses.append(float(metrics["loss"]))
+        assert all(math.isfinite(l) for l in losses)
+        assert int(state["step"]) == 3
+
+    def test_grad_accum_matches_full_batch(self, tiny):
+        """accumulated microbatch gradients == full-batch gradients (linear
+        loss in batch): compare resulting params after one step."""
+        cfg, params = tiny
+        batch = _data(cfg, b=8)
+        s1 = TrainSettings(adamw=opt.AdamWConfig(lr=1e-3, warmup_steps=0,
+                                                 grad_clip=0.0), grad_accum=1)
+        s2 = TrainSettings(adamw=opt.AdamWConfig(lr=1e-3, warmup_steps=0,
+                                                 grad_clip=0.0), grad_accum=4)
+        st1 = opt.init(params, s1.adamw)
+        st2 = opt.init(params, s2.adamw)
+        p1, _, m1 = build_train_step(cfg, s1, None)(params, st1, batch)
+        p2, _, m2 = build_train_step(cfg, s2, None)(params, st2, batch)
+        # CE means differ across microbatches only by masking; tokens are
+        # fully unmasked here, so means match.
+        assert float(m1["loss"]) == pytest.approx(float(m2["loss"]), rel=1e-2)
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_allclose(np.asarray(a, np.float32),
+                                       np.asarray(b, np.float32),
+                                       rtol=5e-2, atol=5e-3)
+
+
+class TestCheckpoint:
+    def test_roundtrip_and_latest(self, tiny, tmp_path):
+        cfg, params = tiny
+        tree = {"params": params, "step": jnp.asarray(7)}
+        ckpt.save(tmp_path, 7, tree)
+        restored, step = ckpt.restore(tmp_path, tree)
+        assert step == 7
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_keep_last_gc(self, tiny, tmp_path):
+        cfg, params = tiny
+        tree = {"p": jnp.ones((4,))}
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(tmp_path, s, tree, keep_last=2)
+        dirs = sorted(p.name for p in pathlib.Path(tmp_path).iterdir()
+                      if p.name.startswith("step_"))
+        assert dirs == ["step_00000004", "step_00000005"]
+        assert ckpt.latest_step(tmp_path) == 5
+
+    def test_structure_mismatch_raises(self, tmp_path):
+        ckpt.save(tmp_path, 0, {"a": jnp.ones((2,))})
+        with pytest.raises(ValueError):
+            ckpt.restore(tmp_path, {"a": jnp.ones((2,)), "b": jnp.ones((2,))})
+
+    def test_shape_mismatch_raises(self, tmp_path):
+        ckpt.save(tmp_path, 0, {"a": jnp.ones((2,))})
+        with pytest.raises(ValueError):
+            ckpt.restore(tmp_path, {"a": jnp.ones((3,))})
+
+
+class TestData:
+    def test_deterministic_and_sharded(self):
+        cfg = DataConfig(vocab_size=100, seq_len=8, global_batch=8)
+        full = SyntheticLM(cfg)
+        b0 = full.batch(3)
+        again = SyntheticLM(cfg).batch(3)
+        np.testing.assert_array_equal(b0["tokens"], again["tokens"])
+        # labels are next-token
+        np.testing.assert_array_equal(b0["tokens"][:, 1:], b0["labels"][:, :-1])
+        # shards are independent slices of the same distribution
+        s0 = SyntheticLM(cfg, shard=0, num_shards=2).batch(3)
+        s1 = SyntheticLM(cfg, shard=1, num_shards=2).batch(3)
+        assert s0["tokens"].shape == (4, 8)
+        assert not np.array_equal(s0["tokens"], s1["tokens"])
+        assert (b0["tokens"] < 100).all() and (b0["tokens"] >= 0).all()
+
+    def test_prefetcher(self):
+        cfg = DataConfig(vocab_size=50, seq_len=4, global_batch=2)
+        pf = Prefetcher(SyntheticLM(cfg), start_step=0, prefetch=2)
+        try:
+            steps = [pf.next()[0] for _ in range(4)]
+            assert steps == [0, 1, 2, 3]
+        finally:
+            pf.close()
+
+
+class TestGradCompress:
+    def test_quantize_bounds(self):
+        x = jnp.asarray(np.random.RandomState(0).randn(128, 64).astype(np.float32))
+        q, s = gc.quantize_int8(x)
+        err = np.abs(np.asarray(gc.dequantize_int8(q, s)) - np.asarray(x))
+        assert err.max() <= float(s) / 2 + 1e-7
+
+    def test_error_feedback_accumulates(self):
+        """With error feedback, the running sum of dequantized values tracks
+        the true running sum (bias-free compression)."""
+        rs = np.random.RandomState(1)
+        g_true = jnp.asarray(rs.randn(256).astype(np.float32) * 1e-3)
+        err = jnp.zeros_like(g_true)
+        total_q = np.zeros(256, np.float32)
+        for _ in range(50):
+            corrected = g_true + err
+            q, s = gc.quantize_int8(corrected)
+            deq = gc.dequantize_int8(q, s)
+            err = corrected - deq
+            total_q += np.asarray(deq)
+        total_true = np.asarray(g_true) * 50
+        np.testing.assert_allclose(total_q, total_true, atol=2 * float(s))
