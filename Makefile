@@ -1,0 +1,13 @@
+# Test entry points.  `make test` is the tier-1 verify command from
+# ROADMAP.md; `make test-fast` is the same sweep with the @slow end-to-end
+# tests deselected (the quick pre-commit loop).
+
+PYTEST = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+
+.PHONY: test test-fast
+
+test:
+	$(PYTEST)
+
+test-fast:
+	$(PYTEST) -m "not slow"

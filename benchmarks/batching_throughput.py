@@ -1,0 +1,115 @@
+"""Continuous-batching throughput: batched vs unbatched decode dispatch.
+
+Drives two ServeEngines over the same reduced model on the CPU backend —
+one with plain per-request dispatch (the paper's server, one device call
+per decode step) and one with the BatchingServer (same-shape decode steps
+from all concurrent streams coalesced into one masked device call) — and
+reports decode tokens/s at 1/2/4/8 concurrent streams.
+
+This is the GCAPS/RTGPU observation made concrete: the paper's server
+bounds *access*, batching closes the *throughput* gap — per-request
+dispatch pays the full device-call overhead (the runtime analogue of
+Lemma 1's 2*eps) once per token, batching pays it once per batch.
+
+Both engines run FIFO ordering so streams interleave fairly (priority
+ordering would serialize the streams and hide the batching effect behind
+starvation).  Writes BENCH_batching.json next to this file.
+"""
+
+from __future__ import annotations
+
+import json
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+STEPS = 24
+PROMPT_LEN = 4
+
+
+def _make_engine(cfg, params, *, batching: bool, max_batch: int):
+    from repro.serving.engine import ServeEngine
+
+    return ServeEngine(cfg, params, max_seq=64, ordering="fifo",
+                       num_servers=1, batching=batching, max_batch=max_batch)
+
+
+def _spec(name: str, prio: int):
+    from repro.serving.engine import StreamSpec
+
+    return StreamSpec(name=name, priority=prio, period_ms=30_000.0,
+                      deadline_ms=30_000.0, prefill_ms=50.0, decode_ms=5.0,
+                      decode_steps=STEPS)
+
+
+def _run(engine, num_streams: int) -> dict:
+    prompt = np.arange(1, PROMPT_LEN + 1, dtype=np.int32)[None, :]
+    names = [f"s{i}" for i in range(num_streams)]
+    for i, n in enumerate(names):
+        decision = engine.admit(_spec(n, num_streams - i))
+        assert decision.admitted, (n, decision.reason)
+    results: dict[str, object] = {}
+
+    def worker(n):
+        results[n] = engine.generate(n, prompt, steps=STEPS)
+
+    threads = [threading.Thread(target=worker, args=(n,)) for n in names]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+    for n in names:
+        engine.remove(n)
+    tokens = sum(len(results[n].tokens) for n in names)
+    server = engine.pool.servers[0]
+    sizes = server.stats.batch_sizes
+    return {
+        "tokens": tokens,
+        "wall_s": wall,
+        "tokens_per_s": tokens / wall,
+        "mean_batch": (sum(sizes) / len(sizes)) if sizes else 1.0,
+    }
+
+
+def main() -> dict:
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models import model as M
+
+    cfg = get_config("internlm2_1_8b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    report: dict = {"model": cfg.name, "steps": STEPS, "streams": {}}
+    for num_streams in (1, 2, 4, 8):
+        row: dict = {}
+        for mode, batching in (("unbatched", False), ("batched", True)):
+            engine = _make_engine(cfg, params, batching=batching,
+                                  max_batch=max(num_streams, 1))
+            try:
+                # warm-up: trace/compile prefill + decode outside the clock
+                _run(engine, 1)
+                row[mode] = _run(engine, num_streams)
+            finally:
+                engine.close()
+        row["speedup"] = (row["batched"]["tokens_per_s"]
+                          / row["unbatched"]["tokens_per_s"])
+        report["streams"][str(num_streams)] = row
+        print(f"{num_streams} streams: unbatched "
+              f"{row['unbatched']['tokens_per_s']:8.1f} tok/s | batched "
+              f"{row['batched']['tokens_per_s']:8.1f} tok/s "
+              f"(mean batch {row['batched']['mean_batch']:.2f}) | "
+              f"speedup {row['speedup']:.2f}x")
+
+    out = Path(__file__).parent / "BENCH_batching.json"
+    out.write_text(json.dumps(report, indent=2))
+    print(f"wrote {out}")
+    return report
+
+
+if __name__ == "__main__":
+    main()

@@ -397,6 +397,16 @@ def _walk(comp: Computation, comps: dict[str, Computation], mult: float,
     return
 
 
+def xla_cost_analysis(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` across JAX versions: newer
+    releases return the properties dict directly, 0.4.x wraps it in a
+    one-element list (one entry per executable module)."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        return ca[0] if ca else {}
+    return ca
+
+
 def analyze_text(text: str) -> Cost:
     comps, entry = parse_module(text)
     acc = Cost()

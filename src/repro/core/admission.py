@@ -18,11 +18,16 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 
 from . import server_analysis
-from .allocation import allocate
+from .allocation import allocate, allocate_pool
 from .task_model import Task
 from .taskset_gen import assign_rm_priorities
 
-__all__ = ["AdmissionController", "AdmissionDecision"]
+__all__ = [
+    "AdmissionController",
+    "AdmissionDecision",
+    "PoolAdmissionController",
+    "check_pool",
+]
 
 
 @dataclass
@@ -78,34 +83,83 @@ def _deadline(tasks: list[Task], name: str) -> float:
     return float("inf")
 
 
-class MultiPodAdmission:
-    """Beyond-paper (§7 future work): one GPU server per pod/accelerator;
-    new streams are placed on the pod where they fit, by worst-fit on
-    accelerator utilization (the paper's own WFD discipline, applied at the
-    pod level)."""
+def check_pool(tasks: list[Task], num_devices: int, cores_per_device: int,
+               *, epsilon_ms: float = 0.05, heuristic: str = "wfd",
+               ) -> tuple["server_analysis.PoolAnalysisResult", "object"]:
+    """Offline pool schedulability check: run the device-assignment step
+    (``allocation.allocate_pool``), then the per-server analysis
+    (``server_analysis.analyze_pool``) on the resulting partitioned system.
+    Returns (analysis, system) so callers can also simulate the placement."""
+    tasks = assign_rm_priorities(tasks)
+    system = allocate_pool(tasks, num_devices, cores_per_device,
+                           epsilon=epsilon_ms, heuristic=heuristic)
+    return server_analysis.analyze_pool(system), system
 
-    def __init__(self, num_pods: int, *, cores_per_pod: int = 2,
-                 epsilon_ms: float = 0.05):
-        self.pods = [AdmissionController(cores_per_pod, epsilon_ms=epsilon_ms)
-                     for _ in range(num_pods)]
+
+class PoolAdmissionController:
+    """Online admission for a multi-accelerator ServerPool.
+
+    A new stream is placed on a device by worst-fit on declared accelerator
+    utilization (the paper's WFD discipline, applied at the device level —
+    the same device-assignment order ``allocation.allocate_pool`` uses
+    offline), and admitted iff the server-based analysis (Eqs (1)-(6))
+    applied WITHIN that device's partition proves every stream already on
+    the device still makes its deadline.  Partitioned assignment means the
+    other devices' analyses are untouched by construction — admission is
+    O(one partition), and an admitted stream's device is stable for its
+    lifetime (the dispatch.ServerPool router pins it).
+    """
+
+    def __init__(self, num_devices: int, *, cores_per_device: int = 2,
+                 epsilon_ms: float = 0.05, heuristic: str = "wfd"):
+        self.devices = [
+            AdmissionController(cores_per_device, epsilon_ms=epsilon_ms,
+                                heuristic=heuristic)
+            for _ in range(num_devices)
+        ]
         self.placement: dict[str, int] = {}
 
-    def gpu_utilization(self, pod: int) -> float:
-        return sum(t.G / t.T for t in self.pods[pod].streams)
+    @property
+    def num_devices(self) -> int:
+        return len(self.devices)
+
+    def gpu_utilization(self, device: int) -> float:
+        return sum(t.G / t.T for t in self.devices[device].streams)
+
+    def device_of(self, name: str) -> int:
+        return self.placement[name]
 
     def try_admit(self, stream: Task) -> tuple[AdmissionDecision, int]:
-        """Try pods in worst-fit (emptiest accelerator first) order."""
-        order = sorted(range(len(self.pods)), key=self.gpu_utilization)
-        last = AdmissionDecision(False, "no pods")
-        for p in order:
-            decision = self.pods[p].try_admit(stream)
+        """Returns (decision, device); device is -1 when rejected."""
+        if stream.name in self.placement:
+            return (AdmissionDecision(
+                False, f"duplicate stream name {stream.name!r}"), -1)
+        order = sorted(range(self.num_devices), key=self.gpu_utilization)
+        last = AdmissionDecision(False, "no devices")
+        for d in order:
+            decision = self.devices[d].try_admit(stream)
             if decision.admitted:
-                self.placement[stream.name] = p
-                return decision, p
+                self.placement[stream.name] = d
+                return decision, d
             last = decision
         return last, -1
 
     def remove(self, name: str) -> None:
-        pod = self.placement.pop(name, None)
-        if pod is not None:
-            self.pods[pod].remove(name)
+        d = self.placement.pop(name, None)
+        if d is not None:
+            self.devices[d].remove(name)
+
+
+class MultiPodAdmission(PoolAdmissionController):
+    """Historical alias (§7 future work, pod vocabulary): one GPU server
+    per pod/accelerator, worst-fit placement — exactly
+    :class:`PoolAdmissionController` with pod-flavored names."""
+
+    def __init__(self, num_pods: int, *, cores_per_pod: int = 2,
+                 epsilon_ms: float = 0.05):
+        super().__init__(num_pods, cores_per_device=cores_per_pod,
+                         epsilon_ms=epsilon_ms)
+
+    @property
+    def pods(self) -> list[AdmissionController]:
+        return self.devices

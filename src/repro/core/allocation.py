@@ -15,6 +15,11 @@ Packing utilizations reflect where CPU demand actually lands:
                       (busy-wait through the whole GPU segment).
   * server approach : task occupies C_i/T_i; the server pseudo-task carries
                       U_server (Eq (8)) onto whichever core it is packed.
+
+Multi-accelerator pools add a device-assignment level above the core level:
+:func:`allocate_pool` first packs GPU-using tasks onto devices by
+accelerator utilization (WFD at the device level), then runs the per-device
+core allocation above within each device's private core group.
 """
 
 from __future__ import annotations
@@ -24,7 +29,7 @@ from dataclasses import dataclass
 
 from .task_model import System, Task, server_utilization
 
-__all__ = ["allocate", "AllocationError"]
+__all__ = ["allocate", "allocate_pool", "AllocationError"]
 
 SERVER_NAME = "__gpu_server__"
 
@@ -85,3 +90,71 @@ def allocate(
             server_core=placement[SERVER_NAME],
         )
     raise ValueError(f"unknown approach {approach!r}")
+
+
+def allocate_pool(
+    tasks: list[Task],
+    num_devices: int,
+    cores_per_device: int,
+    *,
+    epsilon: float = 0.0,
+    heuristic: str = "wfd",
+    device_heuristic: str = "wfd",
+) -> System:
+    """Two-level allocation for a multi-accelerator server pool.
+
+    Level 1 — device assignment (the pool's routing step): GPU-using tasks
+    are packed onto devices by decreasing accelerator utilization G_i/T_i
+    (worst-fit decreasing by default, the paper's WFD discipline applied at
+    the device level); CPU-only tasks are then spread across the devices'
+    core groups by CPU utilization the same way.
+
+    Level 2 — per-device core allocation: within each device's private core
+    group of ``cores_per_device`` cores, tasks plus that device's GPU-server
+    pseudo-task are packed exactly as in :func:`allocate` (server approach).
+
+    The result is ONE ``System`` with ``num_devices * cores_per_device``
+    cores, core-disjoint device partitions (each task's ``device`` set), and
+    one server core per device — the shape ``server_analysis.analyze_pool``
+    and ``simulator.simulate`` (server modes) consume.
+    """
+    if num_devices < 1:
+        raise AllocationError(f"need >= 1 device, got {num_devices}")
+    gpu = sorted((t for t in tasks if t.uses_gpu), key=lambda t: -(t.G / t.T))
+    cpu_only = sorted((t for t in tasks if not t.uses_gpu),
+                      key=lambda t: -(t.C / t.T))
+    dev_gpu_load = [0.0] * num_devices
+    dev_cpu_load = [0.0] * num_devices
+    by_device: list[list[Task]] = [[] for _ in range(num_devices)]
+    for t in gpu:
+        if device_heuristic == "wfd":
+            d = min(range(num_devices), key=lambda i: dev_gpu_load[i])
+        elif device_heuristic == "ffd":
+            d = next((i for i in range(num_devices)
+                      if dev_gpu_load[i] + t.G / t.T <= 1.0 + 1e-12),
+                     min(range(num_devices), key=lambda i: dev_gpu_load[i]))
+        else:
+            raise ValueError(f"unknown device heuristic {device_heuristic!r}")
+        dev_gpu_load[d] += t.G / t.T
+        dev_cpu_load[d] += t.C / t.T
+        by_device[d].append(t)
+    for t in cpu_only:
+        d = min(range(num_devices), key=lambda i: dev_cpu_load[i])
+        dev_cpu_load[d] += t.C / t.T
+        by_device[d].append(t)
+
+    placed: list[Task] = []
+    server_cores: list[int] = []
+    for d in range(num_devices):
+        sub = allocate(by_device[d], cores_per_device, approach="server",
+                       epsilon=epsilon, heuristic=heuristic)
+        offset = d * cores_per_device
+        placed.extend(t.with_core(t.core + offset).with_device(d)
+                      for t in sub.tasks)
+        server_cores.append(sub.server_core + offset)
+    return System(
+        tasks=placed,
+        num_cores=num_devices * cores_per_device,
+        epsilon=epsilon,
+        server_cores=tuple(server_cores),
+    )

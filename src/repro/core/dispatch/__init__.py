@@ -1,0 +1,42 @@
+"""Multi-accelerator dispatch subsystem.
+
+The paper's GPU server (§5.1) arbitrates ONE accelerator.  This package
+grows that spine into a multi-server dispatch layer, the two pieces the
+paper's §7 generalization note calls for:
+
+  * :mod:`repro.core.dispatch.policy` — the queue-ordering policy
+    (priority / FIFO / EDF keys) extracted out of ``AcceleratorServer`` so
+    the executable runtime and the discrete-event simulator share one
+    definition of "who goes first".
+  * :mod:`repro.core.dispatch.pool` — ``ServerPool``: one
+    ``AcceleratorServer`` per device / mesh slice, with a priority-aware
+    router that *partitions* streams across servers (assignment is fixed
+    for a stream's lifetime, like the paper's per-core task partitioning,
+    so each server's queue can be analyzed in isolation by
+    ``server_analysis.analyze_pool``).
+  * :mod:`repro.core.dispatch.batching` — ``BatchingServer``: coalesces
+    same-shape requests (one ``batch_key``) from multiple admitted streams
+    into one device call, amortizing the paper's 2*eps-per-request server
+    overhead (Lemma 1) to 2*eps-per-batch.
+
+Imports are lazy to keep ``policy`` importable from
+``core.server_runtime`` without a cycle (pool/batching import the runtime).
+"""
+
+_EXPORTS = {
+    "request_key": "repro.core.dispatch.policy",
+    "ORDERINGS": "repro.core.dispatch.policy",
+    "BatchRequest": "repro.core.dispatch.batching",
+    "BatchingServer": "repro.core.dispatch.batching",
+    "ServerPool": "repro.core.dispatch.pool",
+}
+
+__all__ = list(_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _EXPORTS:
+        import importlib
+
+        return getattr(importlib.import_module(_EXPORTS[name]), name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,131 @@
+"""ServerPool: one accelerator server per device / mesh slice.
+
+The paper partitions tasks to cores and gives the single GPU one server
+task; here the accelerators themselves are plural, and the same partitioned
+discipline applies one level up: every *stream* is assigned to exactly one
+server when it is admitted, and all of its requests go through that server
+for its lifetime.  Partitioned assignment is what keeps the analysis
+compositional — each server's queue contains only its own streams, so
+Eqs (1)-(6) apply within the partition (``server_analysis.analyze_pool``)
+and admission of a stream on device d cannot disturb deadlines on device
+d' != d.
+
+Routing is priority-aware worst-fit: a new stream lands on the server with
+the least declared device utilization, ties broken toward the server with
+the fewest already-assigned streams of equal-or-higher priority (so
+high-priority streams spread out instead of queueing behind each other),
+then by index.  The caller may also pin a stream to an explicit server —
+the serving engine does this to follow the admission controller's
+device-assignment step (``allocation.allocate_pool``).
+"""
+
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Callable, Hashable
+
+from repro.core.dispatch.batching import BatchingServer, BatchRequest
+from repro.core.server_runtime import AcceleratorServer, Request
+
+__all__ = ["ServerPool", "StreamAssignment"]
+
+
+@dataclass
+class StreamAssignment:
+    server: int
+    utilization: float
+    priority: int
+
+
+class ServerPool:
+    """A fixed set of accelerator servers plus the stream router."""
+
+    def __init__(self, num_servers: int, *, ordering: str = "priority",
+                 batching: bool = False, max_batch: int = 8,
+                 name: str = "pool"):
+        if num_servers < 1:
+            raise ValueError(f"num_servers must be >= 1, got {num_servers}")
+        self.batching = batching
+        if batching:
+            self.servers: list[AcceleratorServer] = [
+                BatchingServer(ordering=ordering, max_batch=max_batch,
+                               name=f"{name}-{i}")
+                for i in range(num_servers)
+            ]
+        else:
+            self.servers = [
+                AcceleratorServer(ordering=ordering, name=f"{name}-{i}")
+                for i in range(num_servers)
+            ]
+        self._assign_lock = threading.Lock()
+        self._streams: dict[str, StreamAssignment] = {}
+
+    # -- routing (partitioned, priority-aware worst-fit) -------------------
+    def _route(self, utilization: float, priority: int) -> int:
+        def load(i: int) -> tuple[float, int, int]:
+            util = sum(a.utilization for a in self._streams.values()
+                       if a.server == i)
+            hp = sum(1 for a in self._streams.values()
+                     if a.server == i and a.priority >= priority)
+            return (util, hp, i)
+
+        return min(range(len(self.servers)), key=load)
+
+    def assign(self, stream: str, *, utilization: float = 0.0,
+               priority: int = 0, server: int | None = None) -> int:
+        """Bind ``stream`` to a server for its lifetime; returns the index.
+        ``server`` pins the choice (e.g. from the admission controller's
+        device assignment); otherwise the router picks worst-fit."""
+        with self._assign_lock:
+            if stream in self._streams:
+                raise ValueError(f"stream {stream!r} already assigned")
+            if server is None:
+                server = self._route(utilization, priority)
+            elif not (0 <= server < len(self.servers)):
+                raise ValueError(f"server {server} outside pool of "
+                                 f"{len(self.servers)}")
+            self._streams[stream] = StreamAssignment(server, utilization, priority)
+            return server
+
+    def remove(self, stream: str) -> None:
+        with self._assign_lock:
+            self._streams.pop(stream, None)
+
+    def server_of(self, stream: str) -> int:
+        return self._streams[stream].server
+
+    def server_for(self, stream: str) -> AcceleratorServer:
+        return self.servers[self._streams[stream].server]
+
+    # -- dispatch ----------------------------------------------------------
+    def submit(self, stream: str, fn: Callable[[], Any], *, priority: int = 0,
+               deadline: float | None = None, name: str = "") -> Request:
+        return self.server_for(stream).submit(
+            fn, priority=priority, deadline=deadline, name=name)
+
+    def submit_batch(self, stream: str, payload: Any, *,
+                     run_batch: Callable[[list[Any]], list[Any]],
+                     batch_key: Hashable, priority: int = 0,
+                     deadline: float | None = None,
+                     name: str = "") -> BatchRequest:
+        server = self.server_for(stream)
+        if not isinstance(server, BatchingServer):
+            raise TypeError("pool was built with batching=False")
+        return server.submit_batch(payload, run_batch=run_batch,
+                                   batch_key=batch_key, priority=priority,
+                                   deadline=deadline, name=name)
+
+    # -- lifecycle ---------------------------------------------------------
+    def shutdown(self, *, drain: bool = True, timeout: float = 30.0) -> None:
+        for s in self.servers:
+            s.shutdown(drain=drain, timeout=timeout)
+
+    def __len__(self) -> int:
+        return len(self.servers)
+
+    def __enter__(self) -> "ServerPool":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.shutdown()

@@ -30,6 +30,8 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from repro.core.dispatch.policy import ORDERINGS, request_key
+
 __all__ = ["AcceleratorServer", "Request", "ServerStats"]
 
 
@@ -77,13 +79,17 @@ class ServerStats:
     max_queue_len: int = 0
     wakeup_latencies: list[float] = field(default_factory=list)  # submit -> dequeue
     notify_latencies: list[float] = field(default_factory=list)  # fn done -> client wakeable
+    # batch dequeue (BatchingServer): device calls made, and how many
+    # requests each one coalesced
+    batches: int = 0
+    batch_sizes: list[int] = field(default_factory=list)
 
 
 class AcceleratorServer:
     """Dedicated server thread owning one accelerator (one mesh slice)."""
 
     def __init__(self, *, ordering: str = "priority", name: str = "gpu-server"):
-        if ordering not in ("priority", "fifo", "edf"):
+        if ordering not in ORDERINGS:
             raise ValueError(ordering)
         self.ordering = ordering
         self._lock = threading.Condition()
@@ -95,6 +101,18 @@ class AcceleratorServer:
         self._thread.start()
 
     # -- client API ------------------------------------------------------
+    def _enqueue(self, req: Request) -> Request:
+        """Stamp, queue, and wake the server (shared by all submit paths)."""
+        req.submit_t = time.monotonic()
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("server stopped")
+            self._seq += 1
+            heapq.heappush(self._queue, (self._key(req), self._seq, req))
+            self.stats.max_queue_len = max(self.stats.max_queue_len, len(self._queue))
+            self._lock.notify()
+        return req
+
     def submit(
         self,
         fn: Callable[[], Any],
@@ -103,17 +121,8 @@ class AcceleratorServer:
         deadline: float | None = None,
         name: str = "",
     ) -> Request:
-        req = Request(fn=fn, priority=priority, deadline=deadline, name=name)
-        req.submit_t = time.monotonic()
-        with self._lock:
-            if self._stop:
-                raise RuntimeError("server stopped")
-            self._seq += 1
-            key = self._key(req)
-            heapq.heappush(self._queue, (key, self._seq, req))
-            self.stats.max_queue_len = max(self.stats.max_queue_len, len(self._queue))
-            self._lock.notify()
-        return req
+        return self._enqueue(
+            Request(fn=fn, priority=priority, deadline=deadline, name=name))
 
     def call(self, fn: Callable[[], Any], *, priority: int = 0, name: str = "") -> Any:
         """Submit and suspend until completion (the common client pattern)."""
@@ -135,11 +144,30 @@ class AcceleratorServer:
 
     # -- internals ---------------------------------------------------------
     def _key(self, req: Request):
-        if self.ordering == "priority":
-            return -req.priority
-        if self.ordering == "edf":
-            return req.deadline if req.deadline is not None else float("inf")
-        return 0  # fifo: seq breaks ties
+        return request_key(self.ordering, priority=req.priority,
+                           deadline=req.deadline)
+
+    def _dequeue_locked(self) -> list[Request]:
+        """Pop the next dispatch unit (called with the lock held).  The base
+        server serves one request per device call; BatchingServer overrides
+        this to coalesce same-shape requests."""
+        _, _, req = heapq.heappop(self._queue)
+        return [req]
+
+    def _execute(self, batch: list[Request]) -> None:
+        """Run one dispatch unit on the accelerator (server thread only)."""
+        req = batch[0]
+        req.start_t = time.monotonic()
+        self.stats.wakeup_latencies.append(req.start_t - req.submit_t)
+        try:
+            req.result = req.fn()  # non-preemptive accelerator execution
+        except BaseException as e:  # noqa: BLE001 - surfaced to the client
+            req.error = e
+        t0 = time.monotonic()
+        req.end_t = t0
+        req._done.set()  # wake the client (it was suspended, not polling)
+        self.stats.notify_latencies.append(time.monotonic() - t0)
+        self.stats.completed += 1
 
     def _serve(self) -> None:
         while True:
@@ -148,15 +176,5 @@ class AcceleratorServer:
                     self._lock.wait()  # server suspends when idle
                 if not self._queue and self._stop:
                     return
-                _, _, req = heapq.heappop(self._queue)
-            req.start_t = time.monotonic()
-            self.stats.wakeup_latencies.append(req.start_t - req.submit_t)
-            try:
-                req.result = req.fn()  # non-preemptive accelerator execution
-            except BaseException as e:  # noqa: BLE001 - surfaced to the client
-                req.error = e
-            t0 = time.monotonic()
-            req.end_t = t0
-            req._done.set()  # wake the client (it was suspended, not polling)
-            self.stats.notify_latencies.append(time.monotonic() - t0)
-            self.stats.completed += 1
+                batch = self._dequeue_locked()
+            self._execute(batch)

@@ -1,6 +1,6 @@
 """Discrete-event simulator for partitioned fixed-priority multicore + one
-non-preemptive accelerator, in the three access-control modes the paper
-evaluates:
+or more non-preemptive accelerators, in the access-control modes the paper
+evaluates (plus the batched extension):
 
   * ``server`` — the paper's GPU-server approach (§5.1): clients submit a
     request and suspend; the server (highest priority on its core) dequeues
@@ -8,10 +8,25 @@ evaluates:
     misc (G^m) portion, suspends during the pure-GPU (G^e) portion, pays eps
     CPU to notify.  Consecutive queued requests are separated by a single
     eps, matching Figure 4.
+  * ``server_fifo`` — same server, FIFO-ordered queue (the paper's §7 /
+    Fig. 15 future-work variant).
+  * ``server_batched`` — beyond-paper: the server coalesces queued
+    same-shape requests (identical (G^e, G^m)) into one accelerator call of
+    up to ``batch_max`` requests: G^e and G^m are paid once per batch, the
+    completion eps once per batch, and one receive eps drains all arrivals
+    since the server last checked its mailbox — amortizing Lemma 1's 2*eps
+    per request toward 2*eps per batch.  Batching only lets requests JOIN
+    the head of the queue, never delays it, so the per-request (unbatched)
+    analysis bound still dominates.
   * ``mpcp``  — synchronization-based, priority-ordered mutex queue; the
     whole GPU segment busy-waits on the client's CPU at the boosted global
     priority ceiling (§4).
   * ``fmlp``  — same, FIFO-ordered mutex queue (FMLP+).
+
+Multi-accelerator systems (``System.server_cores`` with one core per
+device) run one GPU server (or one mutex) per device; each task's
+``device`` attribute routes its segments, matching the partitioned
+``dispatch.ServerPool`` runtime.
 
 The simulator executes exact protocol semantics and is the ground truth the
 analyses are property-tested against (analysis bound >= simulated response
@@ -29,6 +44,7 @@ import heapq
 import math
 from dataclasses import dataclass, field
 
+from .dispatch.policy import request_key
 from .task_model import System, Task
 
 __all__ = ["simulate", "SimResult", "TraceSlice"]
@@ -203,18 +219,29 @@ class _GpuServer:
     (the server is one thread); segment-progress work (m1/m2/notify) takes
     precedence over receive work so an in-flight segment is never stretched
     by unrelated arrivals.
+
+    ``batch_max > 1`` enables batched dispatch (mode='server_batched'):
+    when a segment starts, every queued request with the SAME (G^e, G^m)
+    signature — the simulator's proxy for "same shape" — joins the batch
+    (up to batch_max); the batch runs G^e/G^m once and pays one completion
+    eps.  Receive work is also coalesced: a single eps drains all requests
+    that arrived since the last mailbox check, so a steady batch of b pays
+    ~2*eps instead of 2*b*eps of server CPU.
     """
 
     def __init__(self, eng: _Engine, core: int, eps: int, *,
-                 ordering: str = "priority"):
+                 ordering: str = "priority", batch_max: int = 1,
+                 name: str = "__gpu_server__"):
         self.eng = eng
         self.eps = eps
         self.ordering = ordering  # "priority" | "fifo" (paper §7 extension)
-        self.queue: list[tuple[int, int, object]] = []  # (key, seq, req)
+        self.batch_max = batch_max
+        self.queue: list[tuple[float, int, object]] = []  # (key, seq, req)
         self.seq = 0
         self.gpu_busy = False
         self.notify_pending = False  # a completion eps not yet finished
-        self.thread = _Thread("__gpu_server__", core, _SERVER_PRIO)
+        self.recv_pending = False  # a coalesced receive eps not yet finished
+        self.thread = _Thread(name, core, _SERVER_PRIO)
         self.work: list[tuple[int, int, object]] = []  # (class, seq, (dur, then))
         self.cpu_busy = False
 
@@ -244,16 +271,47 @@ class _GpuServer:
     # -- protocol -----------------------------------------------------------
     def submit(self, prio: int, seg_e: int, seg_m: int, on_complete) -> None:
         self.seq += 1
-        key = 0 if self.ordering == "fifo" else -prio
+        key = request_key(self.ordering, priority=prio)
         heapq.heappush(self.queue, (key, self.seq, (seg_e, seg_m, on_complete)))
-        # receive/wake-up: eps of server CPU per request (Lemma 1)
-        self._cpu(self.eps, self._maybe_start, segment_work=False)
+        if self.batch_max > 1:
+            # coalesced receive: one eps drains every arrival since the
+            # server last checked its mailbox
+            if self.recv_pending:
+                return
+            self.recv_pending = True
+
+            def received():
+                self.recv_pending = False
+                self._maybe_start()
+
+            self._cpu(self.eps, received, segment_work=False)
+        else:
+            # receive/wake-up: eps of server CPU per request (Lemma 1)
+            self._cpu(self.eps, self._maybe_start, segment_work=False)
+
+    def _pop_batch(self) -> tuple[int, int, list]:
+        """Pop the head request plus every same-shape request (identical
+        (G^e, G^m)) up to batch_max; returns (seg_e, seg_m, callbacks)."""
+        _, _, (seg_e, seg_m, on_complete) = heapq.heappop(self.queue)
+        callbacks = [on_complete]
+        if self.batch_max > 1 and self.queue:
+            keep = []
+            for item in sorted(self.queue):  # queue-policy order
+                _, _, (e2, m2, cb2) = item
+                if (len(callbacks) < self.batch_max and e2 == seg_e
+                        and m2 == seg_m):
+                    callbacks.append(cb2)
+                else:
+                    keep.append(item)
+            self.queue = keep
+            heapq.heapify(self.queue)
+        return seg_e, seg_m, callbacks
 
     def _maybe_start(self) -> None:
         if self.gpu_busy or self.notify_pending or not self.queue:
             return
         self.gpu_busy = True
-        _, _, (seg_e, seg_m, on_complete) = heapq.heappop(self.queue)
+        seg_e, seg_m, callbacks = self._pop_batch()
         m1 = seg_m // 2
         m2 = seg_m - m1
 
@@ -265,14 +323,15 @@ class _GpuServer:
             self._cpu(m2, after_m2, segment_work=True)
 
         def after_m2():
-            # completion: eps of server CPU (notify client + dequeue next)
+            # completion: eps of server CPU (notify client(s) + dequeue next)
             self.gpu_busy = False
             self.notify_pending = True
             self._cpu(self.eps, complete, segment_work=True)
 
         def complete():
             self.notify_pending = False
-            on_complete()
+            for cb in callbacks:
+                cb()
             self._maybe_start()  # chained segment: single eps paid (Fig. 4)
 
         self._cpu(m1, after_m1, segment_work=True)
@@ -362,6 +421,7 @@ class _Sim:
         trace: bool,
         splits: dict[str, list[float]] | None,
         offsets: dict[str, float] | None,
+        batch_max: int = 1,
     ):
         self.system = system
         self.mode = mode
@@ -370,26 +430,35 @@ class _Sim:
         self.splits = splits or {}
         self.offsets = offsets or {}
         self.horizon = _ns(horizon_ms)
-        if mode in ("server", "server_fifo"):
-            core = system.server_core
-            if core < 0:
-                raise ValueError("server mode needs system.server_core set")
-            self.server = _GpuServer(
-                self.eng, core, _ns(system.epsilon),
-                ordering="fifo" if mode == "server_fifo" else "priority")
+        if mode in ("server", "server_fifo", "server_batched"):
+            cores = system.server_cores
+            if not cores:
+                raise ValueError("server mode needs system.server_core(s) set")
+            ordering = "fifo" if mode == "server_fifo" else "priority"
+            bmax = batch_max if mode == "server_batched" else 1
+            self.servers = [
+                _GpuServer(self.eng, core, _ns(system.epsilon),
+                           ordering=ordering, batch_max=bmax,
+                           name=f"__gpu_server_{d}__" if len(cores) > 1
+                           else "__gpu_server__")
+                for d, core in enumerate(cores)
+            ]
             self.mode = "server"
         elif mode in ("mpcp", "fmlp"):
-            self.lock = _GpuLock(fifo=(mode == "fmlp"))
+            self.locks = [_GpuLock(fifo=(mode == "fmlp"))
+                          for _ in range(system.num_gpus)]
         else:
             raise ValueError(mode)
 
     def gpu_access(self, job: _Job, seg) -> None:
         e_ns, m_ns = _ns(seg.e), _ns(seg.m)
         if self.mode == "server":
-            # client suspends; server handles the segment
-            self.server.submit(job.task.priority, e_ns, m_ns, job.gpu_done)
+            # client suspends; its device's server handles the segment
+            server = self.servers[job.task.device]
+            server.submit(job.task.priority, e_ns, m_ns, job.gpu_done)
         else:
             th = job.thread
+            lock = self.locks[job.task.device]
 
             def granted():
                 # boosted global ceiling; whole segment busy-waits on CPU
@@ -399,10 +468,10 @@ class _Sim:
 
             def release():
                 self.eng.set_prio(th, th.base_prio)
-                self.lock.release()
+                lock.release()
                 job.gpu_done()
 
-            if self.lock.acquire(job.task.priority, granted):
+            if lock.acquire(job.task.priority, granted):
                 granted()
 
     def run(self) -> SimResult:
@@ -426,10 +495,15 @@ def simulate(
     trace: bool = False,
     splits: dict[str, list[float]] | None = None,
     offsets: dict[str, float] | None = None,
+    batch_max: int = 4,
 ) -> SimResult:
     """Simulate ``system`` for ``horizon_ms`` under ``mode`` in
-    {'server','mpcp','fmlp'}.  Jobs are released periodically (synchronous
-    release at t=0 unless per-task ``offsets`` are given).  ``splits`` may
-    supply an explicit normal-chunk split (list of ms, length eta+1) per task
-    name."""
-    return _Sim(system, mode, horizon_ms, trace, splits, offsets).run()
+    {'server','server_fifo','server_batched','mpcp','fmlp'}.  Jobs are
+    released periodically (synchronous release at t=0 unless per-task
+    ``offsets`` are given).  ``splits`` may supply an explicit normal-chunk
+    split (list of ms, length eta+1) per task name.  ``batch_max`` caps the
+    coalesced batch size in 'server_batched' mode (ignored otherwise).
+    Multi-accelerator systems (``System.server_cores``) run one server (or
+    mutex) per device, routed by each task's ``device``."""
+    return _Sim(system, mode, horizon_ms, trace, splits, offsets,
+                batch_max=batch_max).run()

@@ -68,6 +68,7 @@ class Task:
     segments: tuple[GpuSegment, ...] = ()
     priority: int = 0  # unique; larger = higher priority
     core: int = -1  # CPU core (partitioned scheduling); -1 = unassigned
+    device: int = 0  # accelerator index (multi-GPU pools; 0 when single)
 
     def __post_init__(self) -> None:
         if self.C < 0:
@@ -113,6 +114,9 @@ class Task:
     def with_priority(self, priority: int) -> "Task":
         return replace(self, priority=priority)
 
+    def with_device(self, device: int) -> "Task":
+        return replace(self, device=device)
+
 
 def server_utilization(tasks: list[Task], epsilon: float) -> float:
     """Eq. (8): U_server = sum_{tau_i: eta_i > 0} (G^m_i + 2 eta_i eps)/T_i."""
@@ -121,17 +125,22 @@ def server_utilization(tasks: list[Task], epsilon: float) -> float:
 
 @dataclass
 class System:
-    """A partitioned system: tasks pinned to cores, one shared accelerator.
+    """A partitioned system: tasks pinned to cores, one or more accelerators.
 
     ``epsilon`` is the GPU-server overhead bound (only meaningful for the
     server-based approach).  ``server_core`` is the core hosting the GPU
-    server task (server-based approach only).
+    server task (single-accelerator server-based approach).  A multi-
+    accelerator pool sets ``server_cores`` (one server core per device);
+    each task's ``device`` attribute names the accelerator its segments run
+    on.  ``server_core``/``server_cores`` are kept consistent: for a
+    single-device system either spelling works.
     """
 
     tasks: list[Task]
     num_cores: int
     epsilon: float = 0.0
     server_core: int = -1
+    server_cores: tuple[int, ...] = ()
 
     def __post_init__(self) -> None:
         prios = [t.priority for t in self.tasks]
@@ -140,6 +149,39 @@ class System:
         for t in self.tasks:
             if not (0 <= t.core < self.num_cores):
                 raise ValueError(f"{t.name}: core {t.core} outside 0..{self.num_cores - 1}")
+        if not self.server_cores and self.server_core >= 0:
+            self.server_cores = (self.server_core,)
+        if self.server_cores and self.server_core < 0:
+            self.server_core = self.server_cores[0]
+        for t in self.tasks:
+            if not (0 <= t.device < max(self.num_gpus, 1)):
+                raise ValueError(
+                    f"{t.name}: device {t.device} outside 0..{self.num_gpus - 1}")
+
+    @property
+    def num_gpus(self) -> int:
+        return max(len(self.server_cores), 1)
+
+    def device_tasks(self, device: int) -> list[Task]:
+        return [t for t in self.tasks if t.device == device]
+
+    def subsystem(self, device: int) -> "System":
+        """The single-accelerator System of one device partition (its tasks
+        plus its server core), for per-server analysis.  Core indices stay
+        global.  Raises if the partition shares a core with another device
+        (then per-device analysis would miss CPU interference)."""
+        mine = {t.core for t in self.device_tasks(device)}
+        for t in self.tasks:
+            if t.device != device and t.core in mine:
+                raise ValueError(
+                    f"core {t.core} shared across devices {device} and "
+                    f"{t.device}; partition is not core-disjoint")
+        return System(
+            tasks=[t.with_device(0) for t in self.device_tasks(device)],
+            num_cores=self.num_cores,
+            epsilon=self.epsilon,
+            server_core=self.server_cores[device] if self.server_cores else -1,
+        )
 
     # -- helpers used by every analysis ---------------------------------
     def local_tasks(self, core: int) -> list[Task]:

@@ -1,3 +1,12 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def tpu_compiler_params(dimension_semantics):
+    """CompilerParams across the pallas-TPU rename: jax 0.4.x calls it
+    TPUCompilerParams, newer releases CompilerParams."""
+    cls = getattr(pltpu, "TPUCompilerParams", None) or pltpu.CompilerParams
+    return cls(dimension_semantics=tuple(dimension_semantics))

@@ -19,7 +19,8 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels import tpu_compiler_params
 
 
 def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
@@ -32,7 +33,13 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
 @functools.partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
 def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 256,
             interpret: bool = False):
-    """x (..., D); w (D,) -> same shape/dtype as x."""
+    """x (..., D); w (D,) -> same shape/dtype as x.
+
+    Row counts that are not a multiple of ``block_rows`` are zero-padded up
+    to the next block boundary (each row normalizes independently, so the
+    pad rows are dead work, discarded on the way out) — keeping the block
+    size large instead of shrinking it to a divisor of the row count.
+    """
     orig_shape = x.shape
     d = orig_shape[-1]
     rows = 1
@@ -40,21 +47,19 @@ def rmsnorm(x, w, *, eps: float = 1e-5, block_rows: int = 256,
         rows *= s
     x2 = x.reshape(rows, d)
     br = min(block_rows, rows)
-    while rows % br:
-        br //= 2
-    br = max(br, 1)
+    rows_p = -(-rows // br) * br
+    if rows_p != rows:
+        x2 = jnp.pad(x2, ((0, rows_p - rows), (0, 0)))
     out = pl.pallas_call(
         functools.partial(_rmsnorm_kernel, eps=eps),
-        grid=(rows // br,),
+        grid=(rows_p // br,),
         in_specs=[
             pl.BlockSpec((br, d), lambda i: (i, 0)),
             pl.BlockSpec((d,), lambda i: (0,)),
         ],
         out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel",),
-        ),
+        out_shape=jax.ShapeDtypeStruct((rows_p, d), x.dtype),
+        compiler_params=tpu_compiler_params(("parallel",)),
         interpret=interpret,
     )(x2, w)
-    return out.reshape(orig_shape)
+    return out[:rows].reshape(orig_shape)

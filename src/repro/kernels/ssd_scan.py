@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels import tpu_compiler_params
+
 NEG_INF = -1e30
 
 
@@ -85,9 +87,7 @@ def ssd_intra(x, dt, dA, B, C, *, interpret: bool = False):
             jax.ShapeDtypeStruct((m, h, q, p), x.dtype),
             jax.ShapeDtypeStruct((m, h, n, p), jnp.float32),
         ],
-        compiler_params=pltpu.CompilerParams(
-            dimension_semantics=("parallel", "arbitrary"),
-        ),
+        compiler_params=tpu_compiler_params(("parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, dA, B, C)
     return y, s

@@ -1,23 +1,35 @@
 """Serving engine: the paper's GPU server as the dispatch layer of a JAX
-inference runtime.
+inference runtime — now a multi-server pool with continuous decode batching.
 
-Architecture (one engine per accelerator / mesh slice):
+Architecture (one engine per host; one server per device / mesh slice):
 
-  client streams ──submit──▶ AcceleratorServer (priority queue, §5.1)
-                                  │ one request at a time (XLA is
-                                  ▼  non-preemptive, like the paper's GPU)
-                          jitted prefill / decode steps
-                                  │
-                  completion ─────┘ clients suspended on Request.wait()
+  client streams ──admit──▶ PoolAdmissionController (Eqs (1)-(6) per
+        │                   device partition; device-assignment = WFD on
+        │                   declared accelerator utilization)
+        └──submit──▶ ServerPool ──▶ AcceleratorServer / BatchingServer
+                         │            (priority queue, §5.1; one request —
+                         │             or one BATCH — at a time: XLA is
+                         ▼             non-preemptive, like the paper's GPU)
+              jitted prefill / masked batched decode steps
+                         │
+         completion ─────┘ clients suspended on Request.wait()
 
-  * Each stream declares (period, deadline, segment WCETs) — an
-    AdmissionController (Eqs (1)-(6)) decides whether the stream fits
-    before it may submit (beyond-paper: the paper's offline test, online).
+  * Each stream declares (period, deadline, segment WCETs); admission pins
+    it to one server (partitioned, like the paper's per-core partitioning)
+    and the pool router follows that assignment for the stream's lifetime.
+  * Continuous decode batching (``batching=True``): decode steps from all
+    streams assigned to a server share one slot cache of ``max_batch``
+    rows.  Each stream owns a slot; its prefill cache is inserted into the
+    slot once, and every decode step is a batchable request — the
+    BatchingServer coalesces whatever same-server decode steps are queued
+    into ONE masked device call (amortizing Lemma 1's 2*eps per request to
+    2*eps per batch).  Rows not in the batch are carried through untouched
+    (the masked merge), so partial batches are always safe.
+  * Per-stream sequence state (generated tokens, the last token, latencies)
+    lives in the calling thread, never in the batch: the batch carries only
+    (slot, token) pairs.
   * Straggler mitigation: DeadlineAwarePolicy can bump a stream's priority
-    or the engine can run the server in EDF mode (the paper's future-work
-    FIFO/alternative-ordering discussion).
-  * "GPU segments": a prefill call and each decode call are segments; the
-    CPU-side dispatch cost is the paper's G^m, device time is G^e.
+    or the engine can run the servers in EDF mode.
 """
 
 from __future__ import annotations
@@ -30,8 +42,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.admission import AdmissionController
-from repro.core.server_runtime import AcceleratorServer
+from repro.core.admission import PoolAdmissionController
+from repro.core.dispatch.pool import ServerPool
 from repro.core.task_model import GpuSegment, Task
 from repro.models import model as M
 from repro.runtime.straggler import DeadlineAwarePolicy
@@ -58,17 +70,50 @@ class GenerationResult:
     decode_latencies_s: list[float] = field(default_factory=list)
 
 
+class _SlotState:
+    """Per-server decode-slot state (touched only on that server's thread,
+    except the free-list, which the engine guards with its condition)."""
+
+    def __init__(self, max_batch: int):
+        self.free = list(range(max_batch))
+        self.cache = None  # lazily built (max_batch rows)
+        self.cond = threading.Condition()
+
+
+def _cache_batch_axes(cfg, max_seq: int):
+    """Per-leaf batch axis of the decode cache, discovered by diffing the
+    shapes of a 1-row and a 2-row cache (family-agnostic: stacked layer
+    leaves are (L,B,...), unstacked ones (B,...))."""
+    c1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, max_seq))
+    c2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, max_seq))
+
+    def axis(a, b):
+        for i, (da, db) in enumerate(zip(a.shape, b.shape)):
+            if da != db:
+                return i
+        raise ValueError(f"no batch axis found in cache leaf {a.shape}")
+
+    return jax.tree.map(axis, c1, c2)
+
+
 class ServeEngine:
     def __init__(self, cfg, params, *, max_seq: int = 128, batch_size: int = 1,
                  ordering: str = "priority", admission_cores: int = 2,
                  epsilon_ms: float = 0.05, kv_blocks: int = 0,
-                 kv_block_size: int = 16):
+                 kv_block_size: int = 16, num_servers: int = 1,
+                 batching: bool = False, max_batch: int = 8):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.batch_size = batch_size
-        self.server = AcceleratorServer(ordering=ordering, name="serve-engine")
-        self.admission = AdmissionController(admission_cores, epsilon_ms=epsilon_ms)
+        self.batching = batching
+        self.max_batch = max_batch
+        self.pool = ServerPool(num_servers, ordering=ordering,
+                               batching=batching, max_batch=max_batch,
+                               name="serve-engine")
+        self.admission = PoolAdmissionController(
+            num_servers, cores_per_device=admission_cores,
+            epsilon_ms=epsilon_ms)
         self.straggler = DeadlineAwarePolicy()
         # optional paged-KV accounting: generate() holds block allocations
         # for its sequence's lifetime; exhaustion rejects the request before
@@ -85,79 +130,223 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, b, c: M.apply(cfg, p, b, mode="decode", cache=c))
         self._streams: dict[str, StreamSpec] = {}
+        if batching:
+            self._slots = [_SlotState(max_batch) for _ in range(num_servers)]
+            self._batch_axes = _cache_batch_axes(cfg, max_seq)
+            self._insert_jit = jax.jit(self._insert_impl)
+            self._decode_masked = jax.jit(self._decode_masked_impl)
 
-    # -- stream admission (analysis-driven, Eqs (1)-(6)) -------------------
+    @property
+    def server(self):
+        """The first pool server (single-server back-compat alias)."""
+        return self.pool.servers[0]
+
+    # -- stream admission (analysis-driven, Eqs (1)-(6) per partition) -----
     def admit(self, spec: StreamSpec):
         segs = (GpuSegment(e=spec.prefill_ms * 0.9, m=spec.prefill_ms * 0.1),
                 *(GpuSegment(e=spec.decode_ms * 0.9, m=spec.decode_ms * 0.1),)
                 * spec.decode_steps)
         task = Task(name=spec.name, C=spec.cpu_ms, T=spec.period_ms,
                     D=spec.deadline_ms, segments=segs, priority=spec.priority)
-        decision = self.admission.try_admit(task)
+        decision, device = self.admission.try_admit(task)
         if decision.admitted:
             self._streams[spec.name] = spec
             self.straggler.register(spec.name, spec.deadline_ms)
+            # the router follows the admission's device-assignment step
+            self.pool.assign(spec.name, utilization=task.G / task.T,
+                             priority=spec.priority, server=device)
         return decision
 
     def remove(self, name: str) -> None:
         self.admission.remove(name)
+        self.pool.remove(name)
         self._streams.pop(name, None)
+
+    # -- batched decode internals ------------------------------------------
+    def _insert_impl(self, full, one, slot):
+        """Write a 1-row prefill cache into row ``slot`` of the slot cache."""
+        return jax.tree.map(
+            lambda f, o, ax: jax.lax.dynamic_update_slice_in_dim(
+                f, o.astype(f.dtype), slot, axis=ax),
+            full, one, self._batch_axes)
+
+    def _decode_masked_impl(self, params, tokens, cache, active):
+        """One batched decode step over the slot cache; rows where ``active``
+        is False keep their previous cache (and their logits are garbage,
+        discarded by the caller)."""
+        logits, new_cache, _ = M.apply(self.cfg, params, {"tokens": tokens},
+                                       mode="decode", cache=cache)
+
+        def merge(o, n, ax):
+            shape = [1] * n.ndim
+            shape[ax] = n.shape[ax]
+            return jnp.where(active.reshape(shape), n, o)
+
+        return logits, jax.tree.map(merge, cache, new_cache, self._batch_axes)
+
+    def _acquire_slot(self, si: int) -> int:
+        state = self._slots[si]
+        with state.cond:
+            while not state.free:
+                state.cond.wait()
+            return state.free.pop()
+
+    def _release_slot(self, si: int, slot: int) -> None:
+        state = self._slots[si]
+        with state.cond:
+            state.free.append(slot)
+            state.cond.notify()
+
+    def _insert_slot(self, si: int, slot: int, cache) -> None:
+        """Runs on server ``si``'s thread (serialized with its batches)."""
+        state = self._slots[si]
+        if state.cache is None:
+            state.cache = M.init_cache(self.cfg, self.max_batch, self.max_seq)
+        state.cache = jax.block_until_ready(
+            self._insert_jit(state.cache, cache, jnp.int32(slot)))
+
+    def _run_decode_batch(self, si: int):
+        """run_batch callable for server ``si``: payloads are (slot, token)
+        pairs; ONE masked device call serves them all."""
+
+        def run(payloads):
+            state = self._slots[si]
+            slots = np.array([p[0] for p in payloads], np.int32)
+            toks = np.zeros((self.max_batch, 1), np.int32)
+            toks[slots, 0] = [p[1] for p in payloads]
+            active = np.zeros((self.max_batch,), bool)
+            active[slots] = True
+            logits, state.cache = jax.block_until_ready(
+                self._decode_masked(self.params, jnp.asarray(toks),
+                                    state.cache, jnp.asarray(active)))
+            rows = np.asarray(logits[:, -1], np.float32)
+            return [rows[s] for s in slots]
+
+        return run
 
     # -- generation ---------------------------------------------------------
     def generate(self, name: str, prompt: np.ndarray, *, steps: int,
                  greedy: bool = True) -> GenerationResult:
         """Run one job of stream ``name``: prefill + ``steps`` decode
-        segments, each arbitrated by the server.  The calling thread
-        suspends between segments (never busy-waits)."""
+        segments, each arbitrated by the stream's server.  The calling
+        thread suspends between segments (never busy-waits)."""
+        if self.batching:
+            return self._generate_batched(name, prompt, steps=steps)
         spec = self._streams[name]
         prio = self.straggler.boost(name, spec.priority)
         res = GenerationResult()
+        batch = self._prefill_batch(prompt)
+
+        seq_id = self._kv_reserve(name, prompt, steps)
+        try:
+            t0 = time.monotonic()
+            req = self.pool.submit(
+                name,
+                lambda: jax.block_until_ready(self._prefill(self.params, batch)),
+                priority=prio, name=f"{name}/prefill")
+            logits, cache, _ = req.wait()
+            res.prefill_latency_s = time.monotonic() - t0
+            self.straggler.observe(name, res.prefill_latency_s * 1e3)
+
+            last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            for i in range(steps):
+                step_batch = {"tokens": last[:, None]}
+                t1 = time.monotonic()
+                req = self.pool.submit(
+                    name,
+                    lambda sb=step_batch, c=cache: jax.block_until_ready(
+                        self._decode(self.params, sb, c)),
+                    priority=prio, name=f"{name}/decode{i}")
+                logits, cache, _ = req.wait()
+                dt = time.monotonic() - t1
+                res.decode_latencies_s.append(dt)
+                self.straggler.observe(name, dt * 1e3)
+                last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+                res.tokens.append(int(last[0]))
+        finally:
+            self._kv_release(seq_id)
+        return res
+
+    def _generate_batched(self, name: str, prompt: np.ndarray, *,
+                          steps: int) -> GenerationResult:
+        """Continuous-batching path: prefill through the pool, insert into a
+        slot, then submit each decode step as a batchable request that the
+        server coalesces with other streams' steps."""
+        if prompt.shape[0] != 1:
+            raise ValueError("batched decode serves one sequence per stream "
+                             f"job; got prompt batch {prompt.shape[0]}")
+        spec = self._streams[name]
+        prio = self.straggler.boost(name, spec.priority)
+        si = self.pool.server_of(name)
+        res = GenerationResult()
+        batch = self._prefill_batch(prompt)
+
+        seq_id = self._kv_reserve(name, prompt, steps)
+        try:
+            slot = self._acquire_slot(si)
+            try:
+                t0 = time.monotonic()
+                req = self.pool.submit(
+                    name,
+                    lambda: jax.block_until_ready(
+                        self._prefill(self.params, batch)),
+                    priority=prio, name=f"{name}/prefill")
+                logits, cache, _ = req.wait()
+                self.pool.submit(
+                    name, lambda: self._insert_slot(si, slot, cache),
+                    priority=prio, name=f"{name}/insert").wait()
+                res.prefill_latency_s = time.monotonic() - t0
+                self.straggler.observe(name, res.prefill_latency_s * 1e3)
+
+                token = int(np.argmax(np.asarray(logits[0, -1], np.float32)))
+                run_batch = self._run_decode_batch(si)
+                for i in range(steps):
+                    t1 = time.monotonic()
+                    req = self.pool.submit_batch(
+                        name, (slot, token), run_batch=run_batch,
+                        batch_key=("decode", si), priority=prio,
+                        name=f"{name}/decode{i}")
+                    row = req.wait()  # this slot's logits row, np.float32 (V,)
+                    dt = time.monotonic() - t1
+                    res.decode_latencies_s.append(dt)
+                    self.straggler.observe(name, dt * 1e3)
+                    token = int(np.argmax(row))
+                    res.tokens.append(token)
+            finally:
+                self._release_slot(si, slot)
+        finally:
+            self._kv_release(seq_id)
+        return res
+
+    # -- shared helpers -----------------------------------------------------
+    def _prefill_batch(self, prompt: np.ndarray) -> dict:
         b = prompt.shape[0]
         batch = {"tokens": jnp.asarray(prompt, jnp.int32)}
         if self.cfg.family == "encdec":
-            batch["frames"] = jnp.zeros((b, self.cfg.encoder_seq, self.cfg.d_model),
-                                        self.cfg.dtype)
+            batch["frames"] = jnp.zeros(
+                (b, self.cfg.encoder_seq, self.cfg.d_model), self.cfg.dtype)
+        return batch
 
-        seq_id = None
-        if self.kv is not None:
-            with self._kv_lock:
-                self._seq_counter += 1
-                seq_id = f"{name}#{self._seq_counter}"
-                # reserve prompt + all decode tokens up front (reject early
-                # rather than stall mid-generation)
-                self.kv.allocate(seq_id, prompt.shape[1])
-                try:
-                    self.kv.extend(seq_id, steps)
-                except Exception:
-                    self.kv.free_seq(seq_id)
-                    raise
+    def _kv_reserve(self, name: str, prompt: np.ndarray, steps: int):
+        if self.kv is None:
+            return None
+        with self._kv_lock:
+            self._seq_counter += 1
+            seq_id = f"{name}#{self._seq_counter}"
+            # reserve prompt + all decode tokens up front (reject early
+            # rather than stall mid-generation)
+            self.kv.allocate(seq_id, prompt.shape[1])
+            try:
+                self.kv.extend(seq_id, steps)
+            except Exception:
+                self.kv.free_seq(seq_id)
+                raise
+            return seq_id
 
-        t0 = time.monotonic()
-        req = self.server.submit(
-            lambda: jax.block_until_ready(self._prefill(self.params, batch)),
-            priority=prio, name=f"{name}/prefill")
-        logits, cache, _ = req.wait()
-        res.prefill_latency_s = time.monotonic() - t0
-        self.straggler.observe(name, res.prefill_latency_s * 1e3)
-
-        last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-        for i in range(steps):
-            step_batch = {"tokens": last[:, None]}
-            t1 = time.monotonic()
-            req = self.server.submit(
-                lambda sb=step_batch, c=cache: jax.block_until_ready(
-                    self._decode(self.params, sb, c)),
-                priority=prio, name=f"{name}/decode{i}")
-            logits, cache, _ = req.wait()
-            dt = time.monotonic() - t1
-            res.decode_latencies_s.append(dt)
-            self.straggler.observe(name, dt * 1e3)
-            last = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
-            res.tokens.append(int(last[0]))
+    def _kv_release(self, seq_id) -> None:
         if seq_id is not None:
             with self._kv_lock:
                 self.kv.free_seq(seq_id)
-        return res
 
     def close(self) -> None:
-        self.server.shutdown()
+        self.pool.shutdown()

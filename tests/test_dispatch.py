@@ -1,0 +1,303 @@
+"""Dispatch subsystem: ordering policy, BatchingServer coalescing,
+ServerPool routing, pool allocation/analysis, and the multi-accelerator +
+batched simulator modes."""
+
+import math
+import threading
+import time
+
+import pytest
+
+from repro.core import server_analysis, simulator
+from repro.core.admission import PoolAdmissionController
+from repro.core.allocation import allocate, allocate_pool
+from repro.core.dispatch import BatchingServer, ServerPool, request_key
+from repro.core.task_model import GpuSegment, Task
+from repro.core.taskset_gen import assign_rm_priorities
+
+
+def _tasks(n, *, seg=GpuSegment(e=2.0, m=0.4), T=100.0, C=1.0):
+    ts = [Task(name=f"t{i}", C=C, T=T + i, D=T + i, segments=(seg,))
+          for i in range(n)]
+    return assign_rm_priorities(ts)
+
+
+class TestPolicy:
+    def test_priority_key_orders_descending(self):
+        assert request_key("priority", priority=5) < request_key("priority", priority=1)
+
+    def test_edf_key_orders_by_deadline_none_last(self):
+        assert request_key("edf", deadline=1.0) < request_key("edf", deadline=2.0)
+        assert request_key("edf", deadline=2.0) < request_key("edf")
+
+    def test_fifo_key_constant(self):
+        assert request_key("fifo", priority=9) == request_key("fifo", priority=1)
+
+    def test_unknown_ordering_raises(self):
+        with pytest.raises(ValueError):
+            request_key("lifo")
+
+
+class TestBatchingServer:
+    def test_coalesces_same_key(self):
+        with BatchingServer(max_batch=8) as srv:
+            gate = threading.Event()
+
+            def blocker():
+                gate.wait(5.0)
+                return "unblocked"
+
+            blk = srv.submit(blocker)  # occupies the server thread
+            time.sleep(0.05)  # let the blocker dequeue first
+
+            def run_batch(payloads):
+                return [p * 2 for p in payloads]
+
+            reqs = [srv.submit_batch(i, run_batch=run_batch, batch_key="k")
+                    for i in range(5)]
+            gate.set()
+            assert blk.wait(5.0) == "unblocked"
+            assert [r.wait(5.0) for r in reqs] == [0, 2, 4, 6, 8]
+            assert srv.stats.batches == 1
+            assert srv.stats.batch_sizes == [5]
+
+    def test_different_keys_not_coalesced(self):
+        with BatchingServer(max_batch=8) as srv:
+            gate = threading.Event()
+            srv.submit(lambda: gate.wait(5.0))
+            time.sleep(0.05)
+            run = lambda ps: list(ps)  # noqa: E731
+            ra = [srv.submit_batch(i, run_batch=run, batch_key="a") for i in range(2)]
+            rb = [srv.submit_batch(i, run_batch=run, batch_key="b") for i in range(2)]
+            gate.set()
+            for r in (*ra, *rb):
+                r.wait(5.0)
+            assert sorted(srv.stats.batch_sizes) == [2, 2]
+
+    def test_max_batch_respected(self):
+        with BatchingServer(max_batch=2) as srv:
+            gate = threading.Event()
+            srv.submit(lambda: gate.wait(5.0))
+            time.sleep(0.05)
+            reqs = [srv.submit_batch(i, run_batch=lambda ps: list(ps),
+                                     batch_key="k") for i in range(5)]
+            gate.set()
+            for r in reqs:
+                r.wait(5.0)
+            assert all(s <= 2 for s in srv.stats.batch_sizes)
+            assert sum(srv.stats.batch_sizes) == 5
+
+    def test_batch_error_propagates_to_all(self):
+        with BatchingServer(max_batch=4) as srv:
+            gate = threading.Event()
+            srv.submit(lambda: gate.wait(5.0))
+            time.sleep(0.05)
+
+            def boom(payloads):
+                raise RuntimeError("device fault")
+
+            reqs = [srv.submit_batch(i, run_batch=boom, batch_key="k")
+                    for i in range(3)]
+            gate.set()
+            for r in reqs:
+                with pytest.raises(RuntimeError, match="device fault"):
+                    r.wait(5.0)
+
+    def test_plain_submit_still_works(self):
+        with BatchingServer(max_batch=4) as srv:
+            assert srv.submit(lambda: 7).wait(5.0) == 7
+
+
+class TestServerPool:
+    def test_worst_fit_routing(self):
+        with ServerPool(2) as pool:
+            assert pool.assign("a", utilization=0.5) == 0
+            assert pool.assign("b", utilization=0.2) == 1
+            assert pool.assign("c", utilization=0.1) == 1  # 0.5 vs 0.2
+            assert pool.assign("d", utilization=0.1) == 1  # 0.5 vs 0.3
+
+    def test_priority_tie_break_spreads_high_prio(self):
+        with ServerPool(2) as pool:
+            pool.assign("hi1", priority=10)
+            # equal utilization: the second high-prio stream avoids hi1's server
+            s1 = pool.server_of("hi1")
+            s2 = pool.assign("hi2", priority=10)
+            assert s2 != s1
+
+    def test_pinned_assignment_and_submit(self):
+        with ServerPool(2) as pool:
+            assert pool.assign("x", server=1) == 1
+            assert pool.submit("x", lambda: 3).wait(5.0) == 3
+            assert pool.servers[1].stats.completed == 1
+            assert pool.servers[0].stats.completed == 0
+
+    def test_duplicate_assign_raises(self):
+        with ServerPool(1) as pool:
+            pool.assign("x")
+            with pytest.raises(ValueError):
+                pool.assign("x")
+
+    def test_remove_frees_name(self):
+        with ServerPool(1) as pool:
+            pool.assign("x")
+            pool.remove("x")
+            pool.assign("x")  # no raise
+
+    def test_submit_batch_requires_batching_pool(self):
+        with ServerPool(1, batching=False) as pool:
+            pool.assign("x")
+            with pytest.raises(TypeError):
+                pool.submit_batch("x", 1, run_batch=lambda p: p, batch_key="k")
+
+
+class TestAllocatePool:
+    def test_partitions_are_core_disjoint(self):
+        system = allocate_pool(_tasks(8), 2, 2, epsilon=0.05)
+        assert system.num_gpus == 2
+        assert system.num_cores == 4
+        cores0 = {t.core for t in system.device_tasks(0)}
+        cores1 = {t.core for t in system.device_tasks(1)}
+        assert cores0 <= {0, 1} and cores1 <= {2, 3}
+        assert system.server_cores[0] in (0, 1)
+        assert system.server_cores[1] in (2, 3)
+
+    def test_gpu_load_balanced_wfd(self):
+        system = allocate_pool(_tasks(6), 3, 2, epsilon=0.05)
+        loads = [sum(t.G / t.T for t in system.device_tasks(d))
+                 for d in range(3)]
+        assert max(loads) - min(loads) < max(loads) + 1e-9  # every device used
+        assert all(l > 0 for l in loads)
+
+    def test_single_device_matches_allocate(self):
+        tasks = _tasks(5)
+        pool_sys = allocate_pool(tasks, 1, 2, epsilon=0.05)
+        flat_sys = allocate(tasks, 2, approach="server", epsilon=0.05)
+        a = server_analysis.analyze_pool(pool_sys)
+        b = server_analysis.analyze(flat_sys)
+        for t in tasks:
+            assert a.wcrt(t.name) == pytest.approx(b.wcrt(t.name))
+
+
+class TestAnalyzePool:
+    def test_shared_core_across_devices_rejected(self):
+        tasks = _tasks(2)
+        bad = [tasks[0].with_core(0).with_device(0),
+               tasks[1].with_core(0).with_device(1)]
+        from repro.core.task_model import System
+
+        system = System(tasks=bad, num_cores=1, epsilon=0.05,
+                        server_cores=(0, 0))
+        with pytest.raises(ValueError, match="shared across devices"):
+            server_analysis.analyze_pool(system)
+
+    def test_two_devices_analyzed_independently(self):
+        system = allocate_pool(_tasks(8), 2, 2, epsilon=0.05)
+        res = server_analysis.analyze_pool(system)
+        assert set(res.response_times) == {t.name for t in system.tasks}
+        # each partition's result equals analyzing its subsystem directly
+        for d in (0, 1):
+            sub = server_analysis.analyze(system.subsystem(d))
+            for t in system.device_tasks(d):
+                assert res.wcrt(t.name) == pytest.approx(sub.wcrt(t.name))
+
+    def test_amortized_overhead(self):
+        t = _tasks(1)[0]
+        full = server_analysis.amortized_server_overhead(t, 0.05, 1)
+        assert full == pytest.approx(2 * t.eta * 0.05)
+        assert server_analysis.amortized_server_overhead(t, 0.05, 4) == (
+            pytest.approx(full / 4))
+        with pytest.raises(ValueError):
+            server_analysis.amortized_server_overhead(t, 0.05, 0)
+
+
+class TestMultiGpuSimulator:
+    def test_two_devices_run_independently(self):
+        """A two-device pool must behave exactly like its two single-device
+        partitions simulated separately (partition isolation)."""
+        system = allocate_pool(_tasks(8), 2, 2, epsilon=0.05)
+        pooled = simulator.simulate(system, mode="server", horizon_ms=400)
+        for d in (0, 1):
+            solo = simulator.simulate(system.subsystem(d), mode="server",
+                                      horizon_ms=400)
+            for t in system.device_tasks(d):
+                assert pooled.wcrt(t.name) == pytest.approx(solo.wcrt(t.name))
+
+    def test_batched_mode_coalesces_same_shape(self):
+        seg = GpuSegment(e=4.0, m=0.5)
+        tasks = assign_rm_priorities([
+            Task(name=f"s{i}", C=1.0, T=100.0, D=100.0, segments=(seg,))
+            for i in range(4)
+        ])
+        system = allocate(tasks, 2, approach="server", epsilon=0.05)
+        unb = simulator.simulate(system, mode="server", horizon_ms=100)
+        bat = simulator.simulate(system, mode="server_batched",
+                                 horizon_ms=100, batch_max=4)
+        worst_unb = max(unb.wcrt(t.name) for t in tasks)
+        worst_bat = max(bat.wcrt(t.name) for t in tasks)
+        assert worst_bat < worst_unb  # e paid once per batch, not per request
+        # and batching never makes any task later
+        for t in tasks:
+            assert bat.wcrt(t.name) <= unb.wcrt(t.name) + 1e-9
+
+    def test_batched_bound_still_dominates(self):
+        system = allocate_pool(_tasks(6), 2, 2, epsilon=0.05)
+        res = server_analysis.analyze_pool(system)
+        sim = simulator.simulate(system, mode="server_batched",
+                                 horizon_ms=500, batch_max=4)
+        for t in system.tasks:
+            bound = res.wcrt(t.name)
+            if not math.isinf(bound):
+                assert sim.wcrt(t.name) <= bound + 1e-3
+
+    def test_mpcp_multi_device_locks(self):
+        tasks = _tasks(4)
+        sync = allocate(tasks, 2, approach="sync")
+        placed = [t.with_device(i % 2) for i, t in enumerate(sync.tasks)]
+        from repro.core.task_model import System
+
+        system = System(tasks=placed, num_cores=2, server_cores=(0, 1))
+        res = simulator.simulate(system, mode="mpcp", horizon_ms=400)
+        assert all(res.wcrt(t.name) > 0 for t in tasks)
+
+
+class TestPoolAdmission:
+    def _stream(self, name, *, T=100.0, g=10.0, prio=1):
+        return Task(name=name, C=1.0, T=T, D=T, priority=prio,
+                    segments=(GpuSegment(e=g * 0.9, m=g * 0.1),))
+
+    def test_spreads_across_devices(self):
+        adm = PoolAdmissionController(2, cores_per_device=2)
+        d1, dev1 = adm.try_admit(self._stream("a", prio=2))
+        d2, dev2 = adm.try_admit(self._stream("b", prio=1))
+        assert d1.admitted and d2.admitted
+        assert {dev1, dev2} == {0, 1}  # WFD: second stream takes the idle device
+
+    def test_rejects_when_all_devices_full(self):
+        adm = PoolAdmissionController(2, cores_per_device=2)
+        admitted = 0
+        rejected = False
+        for i in range(40):
+            decision, dev = adm.try_admit(
+                self._stream(f"s{i}", T=100.0, g=60.0, prio=40 - i))
+            if decision.admitted:
+                admitted += 1
+                assert 0 <= dev < 2
+            else:
+                rejected = True
+                assert dev == -1
+                break
+        assert admitted >= 2  # one per device at least
+        assert rejected
+
+    def test_duplicate_rejected(self):
+        adm = PoolAdmissionController(1)
+        assert adm.try_admit(self._stream("x"))[0].admitted
+        dup, dev = adm.try_admit(self._stream("x"))
+        assert not dup.admitted and dev == -1
+
+    def test_remove_frees_capacity(self):
+        adm = PoolAdmissionController(1, cores_per_device=2)
+        assert adm.try_admit(self._stream("x", g=40.0))[0].admitted
+        assert not adm.try_admit(self._stream("y", g=40.0, prio=2))[0].admitted
+        adm.remove("x")
+        assert adm.try_admit(self._stream("y", g=40.0, prio=2))[0].admitted
