@@ -1,13 +1,20 @@
 # Test entry points.  `make test` is the tier-1 verify command from
 # ROADMAP.md; `make test-fast` is the same sweep with the @slow end-to-end
-# tests deselected (the quick pre-commit loop).
+# tests deselected (the quick pre-commit loop).  `make bench-smoke` is the
+# CI-sized paged-vs-masked-dense decode sweep; it writes
+# BENCH_paged_decode_smoke.json (the committed full-grid artifact is
+# BENCH_paged_decode.json from `--paged-sweep` without --smoke).
 
 PYTEST = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
+PYRUN = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast
+.PHONY: test test-fast bench-smoke
 
 test:
 	$(PYTEST)
 
 test-fast:
 	$(PYTEST) -m "not slow"
+
+bench-smoke:
+	$(PYRUN) benchmarks/batching_throughput.py --paged-sweep --smoke

@@ -14,11 +14,20 @@ Lemma 1's 2*eps) once per token, batching pays it once per batch.
 Both engines run FIFO ordering so streams interleave fairly (priority
 ordering would serialize the streams and hide the batching effect behind
 starvation).  Writes BENCH_batching.json next to this file.
+
+``--paged-sweep`` additionally compares the PAGED block-pool decode layout
+against the masked-dense slot cache across occupancy (live streams out of
+``max_batch`` slots) and context length (short prompts vs prompts near
+max_seq): the masked-dense path pays the full (max_batch, max_seq) buffer
+every step; the paged path's device call shrinks with slot compaction and
+the block-table gather width, so the gap is widest exactly where central
+knowledge says the work is small.  Writes BENCH_paged_decode.json.
 """
 
 from __future__ import annotations
 
 import json
+import sys
 import threading
 import time
 from pathlib import Path
@@ -29,31 +38,34 @@ STEPS = 24
 PROMPT_LEN = 4
 
 
-def _make_engine(cfg, params, *, batching: bool, max_batch: int):
+def _make_engine(cfg, params, *, batching: bool, max_batch: int,
+                 paged: bool = False, max_seq: int = 64):
     from repro.serving.engine import ServeEngine
 
-    return ServeEngine(cfg, params, max_seq=64, ordering="fifo",
-                       num_servers=1, batching=batching, max_batch=max_batch)
+    return ServeEngine(cfg, params, max_seq=max_seq, ordering="fifo",
+                       num_servers=1, batching=batching, max_batch=max_batch,
+                       paged=paged, kv_block_size=16)
 
 
-def _spec(name: str, prio: int):
+def _spec(name: str, prio: int, steps: int = STEPS):
     from repro.serving.engine import StreamSpec
 
     return StreamSpec(name=name, priority=prio, period_ms=30_000.0,
                       deadline_ms=30_000.0, prefill_ms=50.0, decode_ms=5.0,
-                      decode_steps=STEPS)
+                      decode_steps=steps)
 
 
-def _run(engine, num_streams: int) -> dict:
-    prompt = np.arange(1, PROMPT_LEN + 1, dtype=np.int32)[None, :]
+def _run(engine, num_streams: int, *, steps: int = STEPS,
+         prompt_len: int = PROMPT_LEN) -> dict:
+    prompt = np.arange(1, prompt_len + 1, dtype=np.int32)[None, :] % 100
     names = [f"s{i}" for i in range(num_streams)]
     for i, n in enumerate(names):
-        decision = engine.admit(_spec(n, num_streams - i))
+        decision = engine.admit(_spec(n, num_streams - i, steps))
         assert decision.admitted, (n, decision.reason)
     results: dict[str, object] = {}
 
     def worker(n):
-        results[n] = engine.generate(n, prompt, steps=STEPS)
+        results[n] = engine.generate(n, prompt, steps=steps)
 
     threads = [threading.Thread(target=worker, args=(n,)) for n in names]
     t0 = time.perf_counter()
@@ -65,14 +77,29 @@ def _run(engine, num_streams: int) -> dict:
     for n in names:
         engine.remove(n)
     tokens = sum(len(results[n].tokens) for n in names)
+    # decode-phase throughput: all streams prefill first (one bucketed call
+    # when batched), so wall minus the slowest prefill is decode-dominated
+    prefill_s = max(results[n].prefill_latency_s for n in names)
+    decode_wall = max(wall - prefill_s, 1e-9)
     server = engine.pool.servers[0]
     sizes = server.stats.batch_sizes
     return {
         "tokens": tokens,
         "wall_s": wall,
         "tokens_per_s": tokens / wall,
+        "decode_tokens_per_s": tokens / decode_wall,
         "mean_batch": (sum(sizes) / len(sizes)) if sizes else 1.0,
     }
+
+
+def _best_of(engine, num_streams: int, *, repeats: int = 3,
+             key: str = "tokens_per_s", **kw) -> dict:
+    """Best-of-N measurement: one scheduler hiccup or GC pause in a ~100ms
+    run swings tokens/s by 2x, and 'fastest clean run' is the number that
+    reflects the dispatch path being measured.  ``key`` picks the metric
+    the comparison cares about (the paged sweep reports decode rates)."""
+    runs = [_run(engine, num_streams, **kw) for _ in range(repeats)]
+    return max(runs, key=lambda r: r[key])
 
 
 def main() -> dict:
@@ -91,9 +118,13 @@ def main() -> dict:
             engine = _make_engine(cfg, params, batching=batching,
                                   max_batch=max(num_streams, 1))
             try:
-                # warm-up: trace/compile prefill + decode outside the clock
-                _run(engine, 1)
-                row[mode] = _run(engine, num_streams)
+                # compile every decode/prefill shape bucket, then one
+                # warm-up run — prefill coalescing widths are timing-
+                # dependent, so only precompile makes them deterministic
+                if batching:
+                    engine.precompile(prompt_buckets=(PROMPT_LEN,))
+                _run(engine, num_streams)
+                row[mode] = _best_of(engine, num_streams)
             finally:
                 engine.close()
         row["speedup"] = (row["batched"]["tokens_per_s"]
@@ -111,5 +142,65 @@ def main() -> dict:
     return report
 
 
+def paged_sweep(*, smoke: bool = False) -> dict:
+    """Paged block-pool vs masked-dense decode across occupancy and context
+    length.  ``smoke`` shrinks the grid/steps for a CI-sized run."""
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models import model as M
+
+    cfg = get_config("internlm2_1_8b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+    max_batch = 8
+    max_seq = 1024  # the masked-dense path pays this buffer every step
+    steps = 32
+    occupancies = (1, 2) if smoke else (1, 2, 4, 8)
+    contexts = {"short": 4}
+    if not smoke:
+        contexts["long"] = max_seq - steps - 8  # prompts near max_seq
+    report: dict = {"model": cfg.name, "max_batch": max_batch,
+                    "max_seq": max_seq, "steps": steps, "cells": []}
+
+    for ctx_name, prompt_len in contexts.items():
+        for occ in occupancies:
+            cell: dict = {"context": ctx_name, "prompt_len": prompt_len,
+                          "occupancy": f"{occ}/{max_batch}"}
+            for mode, paged in (("masked_dense", False), ("paged", True)):
+                engine = _make_engine(cfg, params, batching=True,
+                                      max_batch=max_batch, paged=paged,
+                                      max_seq=max_seq)
+                try:
+                    # compile every decode/prefill shape bucket, then one
+                    # warm-up run — nothing compiles inside the clock
+                    bucket = 1 << (prompt_len - 1).bit_length()
+                    engine.precompile(
+                        prompt_buckets=(min(bucket, max_seq),))
+                    _run(engine, occ, steps=steps, prompt_len=prompt_len)
+                    cell[mode] = _best_of(engine, occ, steps=steps,
+                                          prompt_len=prompt_len,
+                                          key="decode_tokens_per_s")
+                finally:
+                    engine.close()
+            cell["speedup"] = (cell["paged"]["decode_tokens_per_s"]
+                               / cell["masked_dense"]["decode_tokens_per_s"])
+            report["cells"].append(cell)
+            print(f"{ctx_name:>5} ctx, {occ}/{max_batch} live: masked "
+                  f"{cell['masked_dense']['decode_tokens_per_s']:8.1f} tok/s"
+                  f" | paged {cell['paged']['decode_tokens_per_s']:8.1f} "
+                  f"tok/s | speedup {cell['speedup']:.2f}x")
+
+    # the smoke grid must not clobber the committed full-grid artifact
+    name = "BENCH_paged_decode_smoke.json" if smoke else "BENCH_paged_decode.json"
+    out = Path(__file__).parent / name
+    out.write_text(json.dumps(report, indent=2))
+    print(f"wrote {out}")
+    return report
+
+
 if __name__ == "__main__":
-    main()
+    if "--paged-sweep" in sys.argv:
+        paged_sweep(smoke="--smoke" in sys.argv)
+    else:
+        main()

@@ -21,6 +21,14 @@ never delay it: the head starts exactly when it would have unbatched.
 
 All callers of one ``batch_key`` must supply the same ``run_batch``
 semantics (the head's callable serves the whole batch).
+
+Shape decisions stay visible: a ``run_batch`` that compacts rows, pads to a
+power-of-two bucket, or narrows the KV gather to the live block-table width
+reports what it chose via :meth:`BatchingServer.record_meta`; the entries
+land in ``stats.batch_meta`` next to ``batch_sizes`` so the analysis side
+(and tests) can audit that compaction/bucketing only ever SHRANK the device
+call — the declared per-request WCET is the full-width call, which is what
+keeps the per-server bounds (Eqs (1)-(6)) sound under both knobs.
 """
 
 from __future__ import annotations
@@ -75,6 +83,12 @@ class BatchingServer(AcceleratorServer):
             BatchRequest(fn=None, priority=priority, deadline=deadline,
                          name=name, batch_key=batch_key, payload=payload,
                          run_batch=run_batch))
+
+    def record_meta(self, **decision) -> None:
+        """Called by ``run_batch`` callables (on this server's thread) to
+        surface per-call shape decisions — compaction, padding bucket, KV
+        gather width — into ``stats.batch_meta``."""
+        self.stats.batch_meta.append(decision)
 
     # -- internals ---------------------------------------------------------
     def _dequeue_locked(self) -> list[Request]:

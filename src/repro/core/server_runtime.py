@@ -83,6 +83,10 @@ class ServerStats:
     # requests each one coalesced
     batches: int = 0
     batch_sizes: list[int] = field(default_factory=list)
+    # shape decisions the run_batch callable reports per device call
+    # (BatchingServer.record_meta): e.g. paged decode {rows, padded, width,
+    # compacted} or bucketed prefill {rows, padded, bucket}
+    batch_meta: list[dict] = field(default_factory=list)
 
 
 class AcceleratorServer:

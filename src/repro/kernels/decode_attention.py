@@ -27,6 +27,42 @@ from repro.kernels import tpu_compiler_params
 NEG_INF = -1e30
 
 
+# -- online-softmax core ----------------------------------------------------
+# Shared by the masked-dense kernel below and the paged kernel in
+# paged_decode_attention.py: both sweep KV one (bk, H) tile at a time and
+# differ only in how the tile is addressed (contiguous slab vs block-table
+# indirection).  The recurrence state lives in VMEM scratch:
+#   m (1,)  running max,  l (1,)  running denominator,  acc (1, H) numerator.
+
+
+def online_softmax_init(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def online_softmax_block(q, k, v, cols, length, scale, m_ref, l_ref, acc_ref):
+    """Fold one KV tile into the recurrence.  q (1,H); k/v (bk,H) fp32;
+    ``cols`` (1,bk) are the tile's global cache positions — positions >=
+    ``length`` are masked, so callers only need tile-granular early exit."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    s = jnp.where(cols < length, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    alpha = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+
+def online_softmax_finalize(l_ref, acc_ref):
+    denom = jnp.maximum(l_ref[...], 1e-30)
+    return acc_ref[...] / denom[:, None]
+
+
 def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
                    *, scale: float, bk: int):
     j = pl.program_id(2)
@@ -35,32 +71,20 @@ def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
 
     @pl.when(j == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        online_softmax_init(m_ref, l_ref, acc_ref)
 
     @pl.when(j * bk < length)
     def _step():
         q = q_ref[0, 0].astype(jnp.float32)  # (1, H)
         k = k_ref[0, 0].astype(jnp.float32)  # (bk, H)
         v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
         cols = j * bk + jax.lax.broadcasted_iota(jnp.int32, (1, bk), 1)
-        s = jnp.where(cols < length, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
-        p = jnp.exp(s - m_new[:, None])
-        alpha = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
-        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-        m_ref[...] = m_new
+        online_softmax_block(q, k, v, cols, length, scale, m_ref, l_ref,
+                             acc_ref)
 
     @pl.when(j == nk - 1)
     def _finalize():
-        denom = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / denom[:, None]).astype(o_ref.dtype)
+        o_ref[0, 0] = online_softmax_finalize(l_ref, acc_ref).astype(o_ref.dtype)
 
 
 @functools.partial(jax.jit, static_argnames=("scale", "block_k", "interpret"))

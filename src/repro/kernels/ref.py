@@ -47,6 +47,26 @@ def decode_attention_ref(q, k, v, lengths, *, scale: float | None = None):
     return out.reshape(b, nq, h).astype(q.dtype)
 
 
+def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
+                               scale: float | None = None):
+    """q (B,Nq,H); k/v pools (NB,BS,Nkv,H); block_tables (B,W) int32;
+    lengths (B,) -> (B,Nq,H).
+
+    Gathers each row's blocks into a logically contiguous (W*BS) cache view
+    and defers to :func:`decode_attention_ref` — the paged kernel must be
+    exactly 'dense decode attention over the gathered view'."""
+    bs = k_pool.shape[1]
+    b, w = block_tables.shape
+
+    def gather(pool):
+        # (B, W, BS, Nkv, H) -> (B, Nkv, W*BS, H)
+        seq = pool[block_tables].reshape(b, w * bs, *pool.shape[2:])
+        return jnp.swapaxes(seq, 1, 2)
+
+    return decode_attention_ref(q, gather(k_pool), gather(v_pool), lengths,
+                                scale=scale)
+
+
 def ssd_intra_ref(x, dt, dA, B, C):
     """Intra-chunk SSD + chunk-state summary (one chunk per leading index).
 

@@ -143,6 +143,11 @@ def attention(cfg, p: Params, x, *, positions, cache=None, layer_cache=None,
     ``cache == 'build'`` also returns the (k, v) for cache construction.
     Decode: ``layer_cache = (k_cache, v_cache, pos)`` with x of seq-len 1;
     returns (out, (k_cache', v_cache')).
+    Paged decode: ``layer_cache = (k_stack, v_stack, lidx, block_tables,
+    pos)`` with the full layer-stacked pools (L, num_blocks, block_size,
+    Nkv, H) shared across rows, ``lidx`` this layer's index into the stack,
+    and ``block_tables`` (B, W) int32 the per-row indirection; returns
+    (out, (k_stack', v_stack')).
     """
     b, s, d = x.shape
     hd = cfg.head_dim
@@ -170,6 +175,31 @@ def attention(cfg, p: Params, x, *, positions, cache=None, layer_cache=None,
         mask = (idx[None, :] <= idx[:, None])[None, None, None, :, :]
         out = _sdpa(q, k, v, mask=mask, scale=scale)
         new_cache = (k, v) if cache == "build" else None
+    elif len(layer_cache) == 5:
+        # paged decode: the cache is a block POOL shared by all rows, each
+        # row addressing its own blocks through ``tables``.  The pool rides
+        # the layer scan as CARRY — the full (L, NB, BS, Nkv, H) stacks,
+        # indexed by ``lidx`` — so the only per-step data movement is the
+        # one-row scatter of the new token and the gather of the W live
+        # blocks: cost tracks actual work, never pool capacity (the dense
+        # path copies its whole (max_batch, max_seq) cache every step).
+        # Rows never share a tail block (the paged KV manager copy-on-
+        # write-forks shared tails), so scatters are row-disjoint and no
+        # masked merge is needed.
+        k_stack, v_stack, lidx, tables, pos = layer_cache
+        bs_blk = k_stack.shape[2]  # (L, NB, BS, Nkv, H), (B, W), (B,)
+        bidx = jnp.arange(b)
+        blk = tables[bidx, pos // bs_blk]
+        off = pos % bs_blk
+        k_stack = k_stack.at[lidx, blk, off].set(k[:, 0].astype(k_stack.dtype))
+        v_stack = v_stack.at[lidx, blk, off].set(v[:, 0].astype(v_stack.dtype))
+        w = tables.shape[1]
+        k_seq = k_stack[lidx, tables].reshape(b, w * bs_blk, *k_stack.shape[3:])
+        v_seq = v_stack[lidx, tables].reshape(b, w * bs_blk, *v_stack.shape[3:])
+        valid = jnp.arange(w * bs_blk)[None, :] <= pos[:, None]
+        mask = valid[:, None, None, None, :]
+        out = _sdpa(q, k_seq, v_seq, mask=mask, scale=scale)
+        new_cache = (k_stack, v_stack)
     else:
         k_cache, v_cache, pos = layer_cache  # (B, Smax, Nkv, H), pos (B,)
         # write the new token at its position per batch element

@@ -2,6 +2,8 @@
 
     init_params(cfg, key)                      -> params pytree
     init_cache(cfg, batch, max_seq)            -> decode cache pytree
+    init_paged_cache(cfg, blocks, block_size)  -> block-pool decode cache
+    supports_paged(cfg)                        -> paged decode available?
     apply(cfg, params, batch, mode=...)        -> (logits, cache, aux)
     loss_fn(cfg, params, batch, ...)           -> (loss, metrics)
     param_count(cfg)                           -> analytical N (for rooflines)
@@ -34,6 +36,21 @@ def init_params(cfg, key) -> Params:
 
 def init_cache(cfg, batch: int, max_seq: int, dtype=None):
     return _family_mod(cfg).init_cache(cfg, batch, max_seq, dtype)
+
+
+def supports_paged(cfg) -> bool:
+    """True when the family can run its decode cache in block-pool form
+    (``init_paged_cache`` + a ``block_tables`` decode cache)."""
+    mod = _family_mod(cfg)
+    return getattr(mod, "supports_paged", lambda _cfg: False)(cfg)
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
+    """Block-pool decode cache: per layer, k/v pools of shape
+    (num_blocks, block_size, n_kv, head_dim) shared by all sequences; the
+    caller owns block tables and lengths (see serving/kvcache.py)."""
+    return _family_mod(cfg).init_paged_cache(cfg, num_blocks, block_size,
+                                             dtype)
 
 
 def apply(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,

@@ -155,6 +155,36 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=None):
     return cache
 
 
+def supports_paged(cfg) -> bool:
+    """Families whose decode cache can run in block-pool form: plain GQA
+    stacks without non-uniform prefix layers.  (MLA latent pools and SSM
+    state caches are follow-ups; hybrid/encdec mix cache kinds per layer.)"""
+    n_first = cfg.first_dense_layers if cfg.is_moe else 0
+    return (_mixer_kind(cfg) == "gqa" and n_first == 0
+            and cfg.family not in ("encdec", "hybrid"))
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
+    """Zero block-pool decode cache: per scanned layer, k/v pools of shape
+    (num_blocks, block_size, n_kv, head_dim).  Block tables and per-row
+    lengths are NOT part of this pytree — the serving engine passes them per
+    decode call (they change every step; the pool doesn't)."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged decode cache unsupported for family={cfg.family!r} "
+            f"attn_type={cfg.attn_type!r}")
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n_scan = cfg.num_layers
+
+    def one_layer():
+        shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+        return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+    stack = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_scan, *a.shape)),
+                         one_layer())
+    return {"layers": stack}
+
+
 def _shard_cache(cfg, cache):
     kind = _mixer_kind(cfg)
     if kind == "mamba":
@@ -225,24 +255,49 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
         first_caches.append(c)
 
     # -- scanned stack ---------------------------------------------------
-    def body(carry, inp):
-        x, aux_acc = carry
-        if mode == "decode":
-            lp, lc = inp
-            lc = lc + (cache["pos"],)
-        else:
-            lp, lc = inp, None
-        x, c, aux = block(cfg, lp, x, positions=positions,
-                          mrope_positions=mrope_positions, mode=mode,
-                          layer_cache=lc, use_moe=cfg.is_moe)
-        return (x, aux_acc + aux), c
+    paged = mode == "decode" and cache is not None and "block_tables" in cache
 
-    body_fn = body
-    if remat:
-        body_fn = jax.checkpoint(body, policy=remat_policy)
+    if paged:
+        # the pool stacks ride the scan as CARRY (not xs/ys): each layer
+        # scatters one row and gathers W blocks in place, so the scan never
+        # materializes a copy of the whole pool — per-step cost tracks the
+        # live rows' work, not pool capacity
+        def paged_body(carry, lp):
+            x, aux_acc, k_stack, v_stack, lidx = carry
+            lc = (k_stack, v_stack, lidx, cache["block_tables"],
+                  cache["pos"])
+            x, (k_stack, v_stack), aux = block(
+                cfg, lp, x, positions=positions,
+                mrope_positions=mrope_positions, mode=mode, layer_cache=lc,
+                use_moe=cfg.is_moe)
+            return (x, aux_acc + aux, k_stack, v_stack, lidx + 1), None
 
-    xs = (params["layers"], cache["layers"]) if mode == "decode" else params["layers"]
-    (x, aux_total), layer_caches = jax.lax.scan(body_fn, (x, aux_total), xs)
+        k_stack, v_stack = cache["layers"]
+        carry = (x, aux_total, k_stack, v_stack, jnp.int32(0))
+        (x, aux_total, k_stack, v_stack, _), _ = jax.lax.scan(
+            paged_body, carry, params["layers"])
+        layer_caches = (k_stack, v_stack)
+    else:
+        def body(carry, inp):
+            x, aux_acc = carry
+            if mode == "decode":
+                lp, lc = inp
+                lc = lc + (cache["pos"],)
+            else:
+                lp, lc = inp, None
+            x, c, aux = block(cfg, lp, x, positions=positions,
+                              mrope_positions=mrope_positions, mode=mode,
+                              layer_cache=lc, use_moe=cfg.is_moe)
+            return (x, aux_acc + aux), c
+
+        body_fn = body
+        if remat:
+            body_fn = jax.checkpoint(body, policy=remat_policy)
+
+        xs = (params["layers"], cache["layers"]) if mode == "decode" \
+            else params["layers"]
+        (x, aux_total), layer_caches = jax.lax.scan(body_fn, (x, aux_total),
+                                                    xs)
 
     x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
     logits = unembed(cfg, params, x)
@@ -253,13 +308,21 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
     if n_first:
         out_cache["first_layers"] = first_caches
     if mode == "prefill":
-        # lengths: all prompts are full-length here (synthetic serving)
-        out_cache["pos"] = jnp.full((b,), s, jnp.int32)
+        # per-row true lengths: bucketed prefill batching pads same-bucket
+        # prompts to a common length; rows past ``lengths[b]`` hold padding
+        # KV that decode masks (and progressively overwrites)
+        lengths = batch.get("lengths")
+        out_cache["pos"] = (jnp.asarray(lengths, jnp.int32) if lengths
+                            is not None else jnp.full((b,), s, jnp.int32))
         kind = _mixer_kind(cfg)
         if kind in ("gqa", "mla"):
             out_cache = _pad_prefill_cache(cfg, out_cache, batch.get("max_seq", s))
     else:
         out_cache["pos"] = cache["pos"] + 1
+        if paged:
+            # pools are not (L,B,S,...)-shaped; sharding rules don't apply
+            out_cache["block_tables"] = cache["block_tables"]
+            return logits, out_cache, aux_total
     return logits, _shard_cache(cfg, out_cache), aux_total
 
 

@@ -1,5 +1,6 @@
 """Serving engine: the paper's GPU server as the dispatch layer of a JAX
-inference runtime — now a multi-server pool with continuous decode batching.
+inference runtime — a multi-server pool with continuous, PAGED, length-aware
+decode batching.
 
 Architecture (one engine per host; one server per device / mesh slice):
 
@@ -10,7 +11,7 @@ Architecture (one engine per host; one server per device / mesh slice):
                          │            (priority queue, §5.1; one request —
                          │             or one BATCH — at a time: XLA is
                          ▼             non-preemptive, like the paper's GPU)
-              jitted prefill / masked batched decode steps
+              jitted prefill / batched decode steps
                          │
          completion ─────┘ clients suspended on Request.wait()
 
@@ -18,16 +19,33 @@ Architecture (one engine per host; one server per device / mesh slice):
     it to one server (partitioned, like the paper's per-core partitioning)
     and the pool router follows that assignment for the stream's lifetime.
   * Continuous decode batching (``batching=True``): decode steps from all
-    streams assigned to a server share one slot cache of ``max_batch``
-    rows.  Each stream owns a slot; its prefill cache is inserted into the
-    slot once, and every decode step is a batchable request — the
-    BatchingServer coalesces whatever same-server decode steps are queued
-    into ONE masked device call (amortizing Lemma 1's 2*eps per request to
-    2*eps per batch).  Rows not in the batch are carried through untouched
-    (the masked merge), so partial batches are always safe.
-  * Per-stream sequence state (generated tokens, the last token, latencies)
-    lives in the calling thread, never in the batch: the batch carries only
-    (slot, token) pairs.
+    streams assigned to a server coalesce into ONE device call (amortizing
+    Lemma 1's 2*eps per request to 2*eps per batch).  Two cache layouts:
+
+    masked-dense (default): one slot cache of ``max_batch`` dense rows;
+      every step runs over the full (max_batch, max_seq) buffer with
+      inactive rows masked and carried through untouched.
+
+    paged (``paged=True``): per-server KV block POOLS (num_blocks,
+      block_size, n_kv, head_dim) per layer, with ``PagedKVCacheManager``
+      owning the host-side block accounting.  Each step the engine builds a
+      COMPACT batch of only the live rows (slot compaction — padded to the
+      next power of two, never to max_batch) and a block-table gather whose
+      width covers only the live rows' true lengths (bucketed to a power of
+      two).  Device cost scales with actual outstanding work — the paper's
+      central-knowledge argument (§7) pushed into the device hot path.
+      Greedy tokens stay bit-identical to the unbatched dense path: masked
+      tail columns contribute exactly zero to the softmax, and pool rows are
+      scattered disjointly (no masked merge at all).
+
+  * Batched prefill: prefills are length-bucketed — ``batch_key =
+    ("prefill", si, bucket)`` with ``bucket`` the power-of-two pad length —
+    so same-bucket prompts from concurrent streams coalesce into one device
+    call through the same BatchingServer discipline.  Per-row true lengths
+    ride in the batch and become the cache's per-row ``pos``.
+  * Per-stream sequence state (generated tokens, the last token, lengths,
+    block tables, latencies) lives in the calling thread, never in the
+    batch: payloads carry only (token, table, length).
   * Straggler mitigation: DeadlineAwarePolicy can bump a stream's priority
     or the engine can run the servers in EDF mode.
 """
@@ -48,6 +66,13 @@ from repro.core.task_model import GpuSegment, Task
 from repro.models import model as M
 from repro.runtime.straggler import DeadlineAwarePolicy
 from repro.serving.kvcache import PagedKVCacheManager
+
+
+def _pow2ceil(n: int) -> int:
+    """Smallest power of two >= n (>= 1): the shape-bucketing rule for
+    compacted batch rows, prefill pad lengths, and block-table widths —
+    bounds the number of distinct jit traces to O(log) per dimension."""
+    return 1 << max(n - 1, 0).bit_length()
 
 
 @dataclass
@@ -71,29 +96,39 @@ class GenerationResult:
 
 
 class _SlotState:
-    """Per-server decode-slot state (touched only on that server's thread,
-    except the free-list, which the engine guards with its condition)."""
+    """Per-server decode-slot state for the masked-dense layout (touched
+    only on that server's thread, except the free-list, which the engine
+    guards with its condition).  The host-side token/mask staging arrays are
+    preallocated once — the decode hot loop must not allocate."""
 
     def __init__(self, max_batch: int):
         self.free = list(range(max_batch))
         self.cache = None  # lazily built (max_batch rows)
         self.cond = threading.Condition()
+        self.tok_scratch = np.zeros((max_batch, 1), np.int32)
+        self.active_scratch = np.zeros((max_batch,), bool)
 
 
-def _cache_batch_axes(cfg, max_seq: int):
-    """Per-leaf batch axis of the decode cache, discovered by diffing the
-    shapes of a 1-row and a 2-row cache (family-agnostic: stacked layer
-    leaves are (L,B,...), unstacked ones (B,...))."""
-    c1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, max_seq))
-    c2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, max_seq))
+class _PagedState:
+    """Per-server paged-KV state: the host-side block allocator plus the
+    device block pools.  ``mgr``/``lock`` are touched from client threads at
+    job start/end; ``pools`` and the staging buffers only ever from the
+    server's own thread (serialized with its batches)."""
 
-    def axis(a, b):
-        for i, (da, db) in enumerate(zip(a.shape, b.shape)):
-            if da != db:
-                return i
-        raise ValueError(f"no batch axis found in cache leaf {a.shape}")
-
-    return jax.tree.map(axis, c1, c2)
+    def __init__(self, cfg, num_blocks: int, block_size: int, max_batch: int,
+                 max_seq: int):
+        self.mgr = PagedKVCacheManager(num_blocks=num_blocks,
+                                       block_size=block_size)
+        self.lock = threading.Lock()
+        self.nb_max = max_seq // block_size  # table width covering max_seq
+        # one block is held back as the scratch target for padded scatter
+        # lanes (insert tables shorter than nb_max); nothing ever reads it
+        self.scratch_block = self.mgr.allocate("__scratch__", 1)[0]
+        self.pools = None  # lazily built {"layers": ...} block pools
+        # preallocated staging for the compacted decode batch, packed into
+        # ONE int32 array so each step pays a single host->device transfer:
+        # row = [token, length, block_table...]
+        self.pack_scratch = np.zeros((max_batch, 2 + self.nb_max), np.int32)
 
 
 class ServeEngine:
@@ -101,13 +136,26 @@ class ServeEngine:
                  ordering: str = "priority", admission_cores: int = 2,
                  epsilon_ms: float = 0.05, kv_blocks: int = 0,
                  kv_block_size: int = 16, num_servers: int = 1,
-                 batching: bool = False, max_batch: int = 8):
+                 batching: bool = False, max_batch: int = 8,
+                 paged: bool = False):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.batch_size = batch_size
         self.batching = batching
         self.max_batch = max_batch
+        if paged and not batching:
+            raise ValueError("paged=True requires batching=True (the block "
+                             "pools are the batched decode cache layout)")
+        if paged and not M.supports_paged(cfg):
+            raise ValueError(f"paged decode unsupported for {cfg.family}/"
+                             f"{cfg.attn_type}; use paged=False")
+        if paged and max_seq % kv_block_size:
+            raise ValueError(f"max_seq={max_seq} must be a multiple of "
+                             f"kv_block_size={kv_block_size} for the paged "
+                             "layout")
+        self.paged = paged
+        self.kv_block_size = kv_block_size
         self.pool = ServerPool(num_servers, ordering=ordering,
                                batching=batching, max_batch=max_batch,
                                name="serve-engine")
@@ -115,12 +163,14 @@ class ServeEngine:
             num_servers, cores_per_device=admission_cores,
             epsilon_ms=epsilon_ms)
         self.straggler = DeadlineAwarePolicy()
-        # optional paged-KV accounting: generate() holds block allocations
-        # for its sequence's lifetime; exhaustion rejects the request before
-        # any device work is dispatched (backpressure at the cache, not OOM)
+        # optional paged-KV accounting for the UNBATCHED path: generate()
+        # holds block allocations for its sequence's lifetime; exhaustion
+        # rejects the request before any device work is dispatched
+        # (backpressure at the cache, not OOM).  The paged BATCHED path uses
+        # per-server managers instead (see _PagedState).
         self.kv = (PagedKVCacheManager(num_blocks=kv_blocks,
                                        block_size=kv_block_size)
-                   if kv_blocks else None)
+                   if kv_blocks and not self.paged else None)
         self._kv_lock = threading.Lock()
         self._seq_counter = 0
         # max_seq must be static inside the trace (it sizes the cache pad)
@@ -135,6 +185,23 @@ class ServeEngine:
             self._batch_axes = _cache_batch_axes(cfg, max_seq)
             self._insert_jit = jax.jit(self._insert_impl)
             self._decode_masked = jax.jit(self._decode_masked_impl)
+        if self.paged:
+            blocks_per_seq = max_seq // kv_block_size
+            # default pool: every slot can hold a max_seq sequence, plus the
+            # scratch block
+            num_blocks = kv_blocks or (max_batch * blocks_per_seq + 1)
+            self._paged = [
+                _PagedState(cfg, num_blocks, kv_block_size, max_batch,
+                            max_seq)
+                for _ in range(num_servers)
+            ]
+            # the pools argument is donated in both jits: pool updates must
+            # alias, not copy — the pool is owned by the server thread and
+            # immediately replaced by the call's output
+            self._insert_paged_jit = jax.jit(self._insert_paged_impl,
+                                             donate_argnums=(0,))
+            self._decode_paged = jax.jit(self._decode_paged_impl,
+                                         donate_argnums=(2,))
 
     @property
     def server(self):
@@ -162,13 +229,17 @@ class ServeEngine:
         self.pool.remove(name)
         self._streams.pop(name, None)
 
-    # -- batched decode internals ------------------------------------------
-    def _insert_impl(self, full, one, slot):
-        """Write a 1-row prefill cache into row ``slot`` of the slot cache."""
-        return jax.tree.map(
-            lambda f, o, ax: jax.lax.dynamic_update_slice_in_dim(
-                f, o.astype(f.dtype), slot, axis=ax),
-            full, one, self._batch_axes)
+    # -- batched decode internals (masked-dense layout) --------------------
+    def _insert_impl(self, full, batched, src_row, slot):
+        """Copy row ``src_row`` of a (possibly coalesced) prefill cache into
+        row ``slot`` of the slot cache."""
+
+        def one(f, o, ax):
+            row = jax.lax.dynamic_slice_in_dim(o, src_row, 1, axis=ax)
+            return jax.lax.dynamic_update_slice_in_dim(
+                f, row.astype(f.dtype), slot, axis=ax)
+
+        return jax.tree.map(one, full, batched, self._batch_axes)
 
     def _decode_masked_impl(self, params, tokens, cache, active):
         """One batched decode step over the slot cache; rows where ``active``
@@ -197,32 +268,242 @@ class ServeEngine:
             state.free.append(slot)
             state.cond.notify()
 
-    def _insert_slot(self, si: int, slot: int, cache) -> None:
+    def _insert_slot(self, si: int, slot: int, cache, src_row: int) -> None:
         """Runs on server ``si``'s thread (serialized with its batches)."""
         state = self._slots[si]
         if state.cache is None:
             state.cache = M.init_cache(self.cfg, self.max_batch, self.max_seq)
         state.cache = jax.block_until_ready(
-            self._insert_jit(state.cache, cache, jnp.int32(slot)))
+            self._insert_jit(state.cache, cache, jnp.int32(src_row),
+                             jnp.int32(slot)))
 
     def _run_decode_batch(self, si: int):
-        """run_batch callable for server ``si``: payloads are (slot, token)
-        pairs; ONE masked device call serves them all."""
+        """run_batch callable for server ``si`` (masked-dense): payloads are
+        (slot, token) pairs; ONE masked device call serves them all.  The
+        staging arrays are the slot state's preallocated scratch — no
+        per-step host allocation."""
 
         def run(payloads):
             state = self._slots[si]
-            slots = np.array([p[0] for p in payloads], np.int32)
-            toks = np.zeros((self.max_batch, 1), np.int32)
-            toks[slots, 0] = [p[1] for p in payloads]
-            active = np.zeros((self.max_batch,), bool)
-            active[slots] = True
+            toks, active = state.tok_scratch, state.active_scratch
+            toks[:, 0] = 0
+            active[:] = False
+            for slot, token in payloads:
+                toks[slot, 0] = token
+                active[slot] = True
             logits, state.cache = jax.block_until_ready(
                 self._decode_masked(self.params, jnp.asarray(toks),
                                     state.cache, jnp.asarray(active)))
             rows = np.asarray(logits[:, -1], np.float32)
-            return [rows[s] for s in slots]
+            return [rows[slot] for slot, _ in payloads]
 
         return run
+
+    # -- batched decode internals (paged block-pool layout) ----------------
+    def _insert_paged_impl(self, pools, cache, src_row, table):
+        """Scatter row ``src_row`` of a prefill cache (padded to max_seq)
+        into the block pools at ``table`` (nb_max entries; lanes past the
+        sequence's reserved blocks point at the scratch block and carry
+        all-zero rows, so duplicate scatter lanes stay deterministic)."""
+        bs = self.kv_block_size
+
+        def one(pool, leaf):
+            # leaf (L, B, max_seq, nkv, hd) -> rows (L, nb_max, bs, nkv, hd)
+            rows = jax.lax.dynamic_index_in_dim(leaf, src_row, axis=1,
+                                                keepdims=False)
+            rows = rows.reshape(leaf.shape[0], -1, bs, *leaf.shape[3:])
+            return pool.at[:, table].set(rows.astype(pool.dtype))
+
+        return {"layers": jax.tree.map(one, pools["layers"], cache["layers"])}
+
+    def _decode_paged_impl(self, params, packed, pools):
+        """One compacted paged decode step.  ``packed`` (n, 2+W) int32 rows
+        are [token, length, block_table...]: the table width W addresses
+        only the gather the live rows need; rows scatter their new KV into
+        their own blocks (disjoint by construction — no masked merge).  The
+        pool buffers are DONATED by the caller: the update aliases in place
+        instead of copying the whole pool every token."""
+        tokens, lengths, tables = packed[:, :1], packed[:, 1], packed[:, 2:]
+        cache = {"layers": pools["layers"], "pos": lengths,
+                 "block_tables": tables}
+        logits, new_cache, _ = M.apply(self.cfg, params, {"tokens": tokens},
+                                       mode="decode", cache=cache)
+        return logits, {"layers": new_cache["layers"]}
+
+    def _insert_slot_paged(self, si: int, cache, src_row: int,
+                           table: np.ndarray) -> None:
+        """Runs on server ``si``'s thread (serialized with its batches)."""
+        state = self._paged[si]
+        if state.pools is None:
+            state.pools = M.init_paged_cache(self.cfg, state.mgr.num_blocks,
+                                             state.mgr.block_size)
+        state.pools = jax.block_until_ready(
+            self._insert_paged_jit(state.pools, cache, jnp.int32(src_row),
+                                   jnp.asarray(table)))
+
+    def _run_paged_decode(self, si: int):
+        """run_batch callable for server ``si`` (paged): payloads are
+        (token, block_table, length) triples.  Slot compaction + length
+        bucketing happen here: only the live rows enter the device call
+        (padded to the next power of two by duplicating row 0 — duplicate
+        scatter lanes write identical values, so padding is idempotent), and
+        the block-table gather is truncated to the power-of-two width that
+        covers the longest live row."""
+
+        def run(payloads):
+            state = self._paged[si]
+            bs = state.mgr.block_size
+            n = len(payloads)
+            n_pad = min(self.max_batch, _pow2ceil(n))
+            need = max(-(-(length + 1) // bs) for _, _, length in payloads)
+            w = min(state.nb_max, _pow2ceil(need))
+            pack = state.pack_scratch
+            for i, (token, table, length) in enumerate(payloads):
+                pack[i, 0] = token
+                pack[i, 1] = length
+                pack[i, 2:] = table
+            for i in range(n, n_pad):  # idempotent padding rows
+                pack[i] = pack[0]
+            logits, state.pools = jax.block_until_ready(
+                self._decode_paged(self.params,
+                                   jnp.asarray(pack[:n_pad, : 2 + w]),
+                                   state.pools))
+            self.pool.servers[si].record_meta(
+                kind="decode", rows=n, padded=n_pad, width=w,
+                compacted=n_pad < self.max_batch)
+            rows = np.asarray(logits)[:, -1]
+            return [rows[i] for i in range(n)]
+
+        return run
+
+    def _paged_reserve(self, si: int, name: str, prompt_len: int,
+                       steps: int, bucket: int) -> tuple[str, np.ndarray]:
+        """Reserve every block the job will touch up front (reject early
+        rather than stall mid-generation), including the bucketed-prefill
+        pad region, whose padding-token KV must land in owned blocks."""
+        state = self._paged[si]
+        with self._kv_lock:
+            self._seq_counter += 1
+            counter = self._seq_counter
+        with state.lock:
+            seq_id = f"{name}#{counter}"
+            tokens = max(prompt_len + steps, bucket)
+            state.mgr.allocate(seq_id, prompt_len)
+            try:
+                state.mgr.extend(seq_id, tokens - prompt_len)
+            except Exception:
+                state.mgr.free_seq(seq_id)
+                raise
+            blocks = state.mgr.seqs[seq_id].blocks
+            table = np.full((state.nb_max,), state.scratch_block, np.int32)
+            table[: len(blocks)] = blocks
+            return seq_id, table
+
+    def _paged_release(self, si: int, seq_id: str) -> None:
+        state = self._paged[si]
+        with state.lock:
+            state.mgr.free_seq(seq_id)
+
+    # -- batched prefill (length-bucketed) ---------------------------------
+    def _run_prefill_batch(self, si: int, bucket: int):
+        """run_batch callable coalescing same-bucket prefills: payloads are
+        (prompt_row, true_len); ONE device call prefills them all, padded to
+        ``bucket``.  Each result is (last-token logits row, the coalesced
+        cache, this payload's row index) — the caller inserts its row."""
+
+        def run(payloads):
+            n = len(payloads)
+            n_pad = min(self.max_batch, _pow2ceil(n))
+            toks = np.zeros((n_pad, bucket), np.int32)
+            lens = np.zeros((n_pad,), np.int32)
+            for i, (prompt, true_len) in enumerate(payloads):
+                toks[i, :true_len] = prompt
+                lens[i] = true_len
+            for i in range(n, n_pad):  # padding rows: discarded outputs
+                toks[i] = toks[0]
+                lens[i] = lens[0]
+            batch = self._prefill_batch(toks)
+            batch["lengths"] = jnp.asarray(lens)
+            logits, cache, _ = jax.block_until_ready(
+                self._prefill(self.params, batch))
+            self.pool.servers[si].record_meta(
+                kind="prefill", rows=n, padded=n_pad, bucket=bucket)
+            rows = np.asarray(logits[np.arange(n), lens[:n] - 1], np.float32)
+            return [(rows[i], cache, i) for i in range(n)]
+
+        return run
+
+    def precompile(self, prompt_buckets: tuple[int, ...] = ()) -> int:
+        """Compile every batched-decode/prefill shape bucket ahead of time.
+
+        Shape bucketing bounds the trace count to O(log(max_batch) *
+        log(max_seq/block_size)) for paged decode plus O(log(max_batch))
+        per prefill length bucket, but a bucket first hit mid-traffic
+        would stall the whole server behind XLA compilation — a serving
+        engine warms them BEFORE taking load (the dummy inserts scribble on
+        slot/scratch state, so never call this while streams are live).
+        ``prompt_buckets`` lists the power-of-two prefill pad lengths to
+        warm (from the expected prompt-length distribution).  Runs on each
+        server's own thread (serialized with its batches); slot caches /
+        pools are created as a side effect.  Returns the number of shape
+        buckets visited.  No-op unless batching."""
+        if not self.batching:
+            return 0
+        visited = 0
+        for si in range(len(self.pool.servers)):
+            visited += self.pool.servers[si].submit(
+                lambda si=si: self._precompile_server(si, prompt_buckets),
+                name=f"precompile-{si}").wait()
+        return visited
+
+    def _precompile_server(self, si: int, prompt_buckets) -> int:
+        n = 0
+        if self.paged:
+            state = self._paged[si]
+            if state.pools is None:
+                state.pools = M.init_paged_cache(
+                    self.cfg, state.mgr.num_blocks, state.mgr.block_size)
+            rows = 1
+            while rows <= self.max_batch:
+                w = 1
+                while w <= state.nb_max:
+                    # dummy batch: every row scatters token 0 at offset 0
+                    # of the scratch block (idempotent duplicates)
+                    pack = np.zeros((rows, 2 + w), np.int32)
+                    pack[:, 2:] = state.scratch_block
+                    _, state.pools = jax.block_until_ready(
+                        self._decode_paged(self.params, jnp.asarray(pack),
+                                           state.pools))
+                    n += 1
+                    w *= 2
+                rows *= 2
+        else:
+            state = self._slots[si]
+            if state.cache is None:
+                state.cache = M.init_cache(self.cfg, self.max_batch,
+                                           self.max_seq)
+            toks = jnp.zeros((self.max_batch, 1), jnp.int32)
+            active = jnp.zeros((self.max_batch,), bool)  # all-masked: no-op
+            _, state.cache = jax.block_until_ready(
+                self._decode_masked(self.params, toks, state.cache, active))
+            n += 1
+        for bucket in prompt_buckets:
+            rows = 1
+            while rows <= self.max_batch:
+                batch = self._prefill_batch(np.zeros((rows, bucket),
+                                                     np.int32))
+                batch["lengths"] = jnp.ones((rows,), jnp.int32)
+                _, cache, _ = jax.block_until_ready(
+                    self._prefill(self.params, batch))
+                if self.paged:
+                    table = np.full((self._paged[si].nb_max,),
+                                    self._paged[si].scratch_block, np.int32)
+                    self._insert_slot_paged(si, cache, 0, table)
+                else:
+                    self._insert_slot(si, 0, cache, 0)
+                n += 2
+                rows *= 2
+        return n
 
     # -- generation ---------------------------------------------------------
     def generate(self, name: str, prompt: np.ndarray, *, steps: int,
@@ -269,9 +550,10 @@ class ServeEngine:
 
     def _generate_batched(self, name: str, prompt: np.ndarray, *,
                           steps: int) -> GenerationResult:
-        """Continuous-batching path: prefill through the pool, insert into a
-        slot, then submit each decode step as a batchable request that the
-        server coalesces with other streams' steps."""
+        """Continuous-batching path: length-bucketed batched prefill through
+        the pool, insert into a slot (dense row) or the block pools (paged),
+        then submit each decode step as a batchable request that the server
+        coalesces — and, when paged, compacts — with other streams' steps."""
         if prompt.shape[0] != 1:
             raise ValueError("batched decode serves one sequence per stream "
                              f"job; got prompt batch {prompt.shape[0]}")
@@ -279,43 +561,67 @@ class ServeEngine:
         prio = self.straggler.boost(name, spec.priority)
         si = self.pool.server_of(name)
         res = GenerationResult()
-        batch = self._prefill_batch(prompt)
+        true_len = prompt.shape[1]
+        bucket = min(_pow2ceil(true_len), self.max_seq)
+        if true_len + steps > self.max_seq:
+            raise ValueError(f"prompt {true_len} + steps {steps} exceeds "
+                             f"max_seq {self.max_seq}")
 
-        seq_id = self._kv_reserve(name, prompt, steps)
+        seq_id = table = None
+        if self.paged:
+            seq_id, table = self._paged_reserve(si, name, true_len, steps,
+                                                bucket)
+        else:
+            seq_id = self._kv_reserve(name, prompt, steps)
         try:
             slot = self._acquire_slot(si)
             try:
                 t0 = time.monotonic()
-                req = self.pool.submit(
-                    name,
-                    lambda: jax.block_until_ready(
-                        self._prefill(self.params, batch)),
-                    priority=prio, name=f"{name}/prefill")
-                logits, cache, _ = req.wait()
-                self.pool.submit(
-                    name, lambda: self._insert_slot(si, slot, cache),
-                    priority=prio, name=f"{name}/insert").wait()
+                req = self.pool.submit_batch(
+                    name, (np.asarray(prompt[0], np.int32), true_len),
+                    run_batch=self._run_prefill_batch(si, bucket),
+                    batch_key=("prefill", si, bucket), priority=prio,
+                    name=f"{name}/prefill")
+                row_logits, cache, src_row = req.wait()
+                if self.paged:
+                    self.pool.submit(
+                        name, lambda: self._insert_slot_paged(
+                            si, cache, src_row, table),
+                        priority=prio, name=f"{name}/insert").wait()
+                else:
+                    self.pool.submit(
+                        name, lambda: self._insert_slot(
+                            si, slot, cache, src_row),
+                        priority=prio, name=f"{name}/insert").wait()
                 res.prefill_latency_s = time.monotonic() - t0
                 self.straggler.observe(name, res.prefill_latency_s * 1e3)
 
-                token = int(np.argmax(np.asarray(logits[0, -1], np.float32)))
-                run_batch = self._run_decode_batch(si)
+                token = int(np.argmax(row_logits))
+                length = true_len
+                run_batch = (self._run_paged_decode(si) if self.paged
+                             else self._run_decode_batch(si))
                 for i in range(steps):
+                    payload = ((token, table, length) if self.paged
+                               else (slot, token))
                     t1 = time.monotonic()
                     req = self.pool.submit_batch(
-                        name, (slot, token), run_batch=run_batch,
+                        name, payload, run_batch=run_batch,
                         batch_key=("decode", si), priority=prio,
                         name=f"{name}/decode{i}")
-                    row = req.wait()  # this slot's logits row, np.float32 (V,)
+                    row = req.wait()  # this row's logits, np.float32 (V,)
                     dt = time.monotonic() - t1
                     res.decode_latencies_s.append(dt)
                     self.straggler.observe(name, dt * 1e3)
                     token = int(np.argmax(row))
+                    length += 1
                     res.tokens.append(token)
             finally:
                 self._release_slot(si, slot)
         finally:
-            self._kv_release(seq_id)
+            if self.paged:
+                self._paged_release(si, seq_id)
+            else:
+                self._kv_release(seq_id)
         return res
 
     # -- shared helpers -----------------------------------------------------
@@ -350,3 +656,19 @@ class ServeEngine:
 
     def close(self) -> None:
         self.pool.shutdown()
+
+
+def _cache_batch_axes(cfg, max_seq: int):
+    """Per-leaf batch axis of the decode cache, discovered by diffing the
+    shapes of a 1-row and a 2-row cache (family-agnostic: stacked layer
+    leaves are (L,B,...), unstacked ones (B,...))."""
+    c1 = jax.eval_shape(lambda: M.init_cache(cfg, 1, max_seq))
+    c2 = jax.eval_shape(lambda: M.init_cache(cfg, 2, max_seq))
+
+    def axis(a, b):
+        for i, (da, db) in enumerate(zip(a.shape, b.shape)):
+            if da != db:
+                return i
+        raise ValueError(f"no batch axis found in cache leaf {a.shape}")
+
+    return jax.tree.map(axis, c1, c2)

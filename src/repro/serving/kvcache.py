@@ -14,9 +14,34 @@ This module is the HOST-side allocator + table builder:
     coordinate;
   * fragmentation-free by construction (fixed-size blocks).
 
-The device-side gather (cache[block_table] -> contiguous view) is exercised
-in tests with the pure-jnp reference; the Pallas decode kernel consumes the
-same layout one block column at a time.
+Device-side data path (the paged batched decode hot loop):
+
+  block POOL (device)       one zero pool per server & layer,
+    (num_blocks, block_size, n_kv, head_dim)    built by
+    ``models.model.init_paged_cache``;          prefill KV is scattered
+    into a stream's reserved blocks once (ServeEngine._insert_paged_impl)
+        │
+  block TABLE (host->device)   this manager's per-sequence block list,
+    (rows, W) int32            padded row built by :meth:`block_table`;
+        │                      W covers only the LIVE rows' lengths
+        ▼                      (power-of-two bucketed per step)
+  paged gather-attend       pool[tables] -> (rows, W*block_size, ...) view,
+                            masked past ``lengths``; kernels/
+                            paged_decode_attention.py does the same via
+                            scalar-prefetch indirection, one block per
+                            grid step, early-exiting past each length
+
+When does which knob kick in (ServeEngine, paged=True):
+  * slot COMPACTION — every step: only live rows enter the device call,
+    padded to the next power of two; the call narrows whenever fewer than
+    half the slots are decoding (pow2(n) < max_batch <=> n <= max_batch/2).
+  * length BUCKETING — every step for the gather width W (pow2 of the
+    longest live row's block count); at prefill, same-bucket prompts
+    coalesce under batch_key ("prefill", server, bucket).
+
+Exact per-stream lengths stay HERE, host-side: the device never sees a
+length it doesn't need, and the analysis side keeps its per-request bounds
+(declared WCET = full-width call; compaction/bucketing only shrink).
 """
 
 from __future__ import annotations
@@ -63,21 +88,26 @@ class PagedKVCacheManager:
         return list(alloc.blocks)
 
     def extend(self, seq_id: str, new_tokens: int = 1) -> list[int]:
-        """Grow a sequence; returns newly allocated block ids (often [])."""
+        """Grow a sequence; returns newly allocated block ids (often []).
+
+        Copy-on-write: the fork decision is made BEFORE any blocks are
+        appended — if the first new token lands in a shared, partially-
+        filled tail block (``length % block_size != 0`` and refcount > 1),
+        that tail is forked; a full shared tail needs no fork because new
+        tokens only ever touch freshly appended blocks."""
         a = self.seqs[seq_id]
-        target = self._blocks_for(a.length + new_tokens)
         fresh = []
+        if new_tokens and a.length % self.block_size:
+            last = a.blocks[-1]
+            if self.refcount[last] > 1:
+                fork = self._take_block()
+                self.refcount[last] -= 1
+                a.blocks[-1] = fork
+                fresh.append(fork)
+        target = self._blocks_for(a.length + new_tokens)
         while len(a.blocks) < target:
-            # copy-on-write: a shared tail block must be forked before write
             fresh.append(self._take_block())
             a.blocks.append(fresh[-1])
-        # forking a shared final block on write
-        last = a.blocks[-1]
-        if self.refcount[last] > 1 and (a.length % self.block_size or new_tokens):
-            fork = self._take_block()
-            self.refcount[last] -= 1
-            a.blocks[-1] = fork
-            fresh.append(fork)
         a.length += new_tokens
         return fresh
 

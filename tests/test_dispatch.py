@@ -210,6 +210,59 @@ class TestAnalyzePool:
             server_analysis.amortized_server_overhead(t, 0.05, 0)
 
 
+class TestAmortizedAdmissionMode:
+    """PoolAdmissionController(min_batch=b): the optimistic 2*eps/b overhead
+    mode for dispatchers that guarantee a minimum coalesced batch size."""
+
+    @staticmethod
+    def _heavy_task(name="hog"):
+        # 10 requests/job x (e=1, m=0.2): with eps=5ms the full per-job
+        # server overhead is 2*10*5 = 100ms — the dominant response term
+        segs = (GpuSegment(e=1.0, m=0.2),) * 10
+        return Task(name=name, C=1.0, T=200.0, D=50.0, segments=segs)
+
+    def test_admits_set_the_default_mode_rejects(self):
+        task = self._heavy_task()
+        strict = PoolAdmissionController(1, cores_per_device=2,
+                                         epsilon_ms=5.0)
+        decision, _ = strict.try_admit(task)
+        assert not decision.admitted  # W ~ C+G+100 = 113 > D=50
+
+        amortized = PoolAdmissionController(1, cores_per_device=2,
+                                            epsilon_ms=5.0, min_batch=4)
+        decision, device = amortized.try_admit(task)
+        assert decision.admitted  # W ~ C+G+25 = 38 <= 50
+        assert device == 0
+
+    def test_admits_strictly_more_task_sets(self):
+        """Sweep generated task sets: every set the default mode admits in
+        full, the amortized mode admits too (eps-monotonicity of the
+        bounds), and at least one set is admitted ONLY when amortized."""
+        import random
+
+        from repro.core.taskset_gen import GenParams, generate_taskset
+
+        strictly_more = 0
+        for seed in range(20):
+            rng = random.Random(seed)
+            tasks = generate_taskset(
+                GenParams(num_cores=2, num_tasks=(3, 6), epsilon_ms=5.0),
+                rng)
+            strict = PoolAdmissionController(1, cores_per_device=2,
+                                             epsilon_ms=5.0)
+            amort = PoolAdmissionController(1, cores_per_device=2,
+                                            epsilon_ms=5.0, min_batch=8)
+            n_strict = sum(strict.try_admit(t)[0].admitted for t in tasks)
+            n_amort = sum(amort.try_admit(t)[0].admitted for t in tasks)
+            assert n_amort >= n_strict, seed
+            strictly_more += n_amort > n_strict
+        assert strictly_more > 0
+
+    def test_min_batch_validation(self):
+        with pytest.raises(ValueError, match="min_batch"):
+            PoolAdmissionController(1, min_batch=0)
+
+
 class TestMultiGpuSimulator:
     def test_two_devices_run_independently(self):
         """A two-device pool must behave exactly like its two single-device

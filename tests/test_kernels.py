@@ -10,6 +10,7 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.paged_decode_attention import paged_decode_attention
 from repro.kernels.ssd_scan import ssd_intra
 
 
@@ -96,6 +97,79 @@ class TestDecodeAttention:
         want = ref.decode_attention_ref(q, k, v, lengths)
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-5, atol=1e-5)
+
+
+class TestPagedDecodeAttention:
+    """Block-table KV gather: the paged kernel must equal dense decode
+    attention over the gathered contiguous view (kernels/ref.py oracle)."""
+
+    @staticmethod
+    def _make(key, b, nq, nkv, h, nb, bs, w, dtype):
+        ks = jax.random.split(key, 4)
+        q = _rand(ks[0], (b, nq, h), dtype)
+        k_pool = _rand(ks[1], (nb, bs, nkv, h), dtype)
+        v_pool = _rand(ks[2], (nb, bs, nkv, h), dtype)
+        # each row gets w distinct pool blocks, deliberately out of order
+        perm = jax.random.permutation(ks[3], nb)[: b * w]
+        tables = perm.reshape(b, w).astype(jnp.int32)
+        return q, k_pool, v_pool, tables
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("b,nq,nkv,h,nb,bs,w", [
+        (2, 4, 4, 64, 16, 16, 4),    # MHA
+        (2, 8, 2, 64, 32, 32, 6),    # GQA
+        (1, 4, 1, 128, 8, 64, 3),    # MQA
+    ])
+    def test_matches_ref(self, b, nq, nkv, h, nb, bs, w, dtype):
+        key = jax.random.PRNGKey(11)
+        q, kp, vp, tables = self._make(key, b, nq, nkv, h, nb, bs, w, dtype)
+        lengths = jax.random.randint(jax.random.fold_in(key, 1), (b,), 1,
+                                     w * bs + 1)
+        got = paged_decode_attention(q, kp, vp, tables, lengths,
+                                     interpret=True)
+        want = ref.paged_decode_attention_ref(q, kp, vp, tables, lengths)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **TOL[dtype])
+
+    def test_short_lengths_skip_blocks(self):
+        """Rows whose length covers only the first block(s): remaining table
+        entries may point anywhere (pad blocks) without affecting output."""
+        b, nq, nkv, h, nb, bs, w = 3, 2, 2, 64, 12, 16, 4
+        q, kp, vp, tables = self._make(jax.random.PRNGKey(12), b, nq, nkv, h,
+                                       nb, bs, w, jnp.float32)
+        lengths = jnp.array([1, 16, 17], jnp.int32)
+        got = paged_decode_attention(q, kp, vp, tables, lengths,
+                                     interpret=True)
+        want = ref.paged_decode_attention_ref(q, kp, vp, tables, lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        # scribbling on the dead tail blocks must not change the output
+        tables2 = tables.at[0, 1:].set(0).at[1, 1:].set(0)
+        got2 = paged_decode_attention(q, kp, vp, tables2, lengths,
+                                      interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[:2]),
+                                      np.asarray(got2[:2]))
+
+    def test_matches_masked_dense_kernel(self):
+        """Paged and masked-dense kernels share the online-softmax core: on
+        the same logical cache they must agree to fp tolerance."""
+        b, nq, nkv, h, bs, w = 2, 4, 2, 64, 32, 4
+        smax = bs * w
+        ks = jax.random.split(jax.random.PRNGKey(13), 3)
+        q = _rand(ks[0], (b, nq, h), jnp.float32)
+        k = _rand(ks[1], (b, nkv, smax, h), jnp.float32)
+        v = _rand(ks[2], (b, nkv, smax, h), jnp.float32)
+        lengths = jnp.array([smax, 37], jnp.int32)
+        # identity paging: row b uses blocks [b*w, b*w+1, ...)
+        tables = (jnp.arange(b)[:, None] * w + jnp.arange(w)[None, :]
+                  ).astype(jnp.int32)
+        kp = jnp.swapaxes(k, 1, 2).reshape(b * w, bs, nkv, h)
+        vp = jnp.swapaxes(v, 1, 2).reshape(b * w, bs, nkv, h)
+        dense = decode_attention(q, k, v, lengths, block_k=bs, interpret=True)
+        paged = paged_decode_attention(q, kp, vp, tables, lengths,
+                                       interpret=True)
+        np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
+                                   rtol=1e-6, atol=1e-6)
 
 
 class TestSSDIntra:

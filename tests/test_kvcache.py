@@ -1,7 +1,10 @@
 """Paged KV-cache manager: allocation, growth, copy-on-write prefix
-sharing, exhaustion, and the device-side gather semantics."""
+sharing, exhaustion (incl. mid-extend failure atomicity), fork/free
+ordering, concurrent reserve/release, and the device-side gather
+semantics."""
 
-import jax.numpy as jnp
+import threading
+
 import numpy as np
 import pytest
 
@@ -79,6 +82,154 @@ class TestPrefixSharing:
         assert m.blocks_in_use == 2
         m.free_seq("child")
         assert m.blocks_in_use == 0
+
+
+class TestCowRefcountCorners:
+    """Copy-on-write / refcount corner cases the serving hot path leans on."""
+
+    def test_fork_then_free_parent_then_extend_child(self):
+        """Freeing the parent first must leave the child's view intact AND
+        drop the shared refcounts so the child's tail write no longer
+        forks (refcount back to 1)."""
+        m = PagedKVCacheManager(num_blocks=8, block_size=4)
+        m.allocate("parent", 6)  # 2 blocks, tail half-full
+        m.fork("parent", "child")
+        m.free_seq("parent")
+        assert m.blocks_in_use == 2  # child keeps both
+        fresh = m.extend("child", 1)
+        assert fresh == []  # sole owner now: in-place append, no COW fork
+        m.free_seq("child")
+        assert m.blocks_in_use == 0
+
+    def test_fork_then_free_child_then_parent(self):
+        m = PagedKVCacheManager(num_blocks=8, block_size=4)
+        m.allocate("parent", 8)
+        m.fork("parent", "child")
+        m.extend("child", 1)  # forks the tail + grows
+        in_use = m.blocks_in_use
+        m.free_seq("child")
+        # the forked tail and the growth block return; shared prefix stays
+        assert m.blocks_in_use < in_use
+        m.free_seq("parent")
+        assert m.blocks_in_use == 0
+        assert all(r == 0 for r in m.refcount)
+
+    def test_double_fork_refcounts(self):
+        m = PagedKVCacheManager(num_blocks=8, block_size=4)
+        m.allocate("p", 4)
+        m.fork("p", "c1")
+        m.fork("p", "c2")
+        (b,) = m.seqs["p"].blocks
+        assert m.refcount[b] == 3
+        for s in ("p", "c1", "c2"):
+            m.free_seq(s)
+        assert m.blocks_in_use == 0
+
+    def test_multi_token_extend_forks_shared_partial_tail(self):
+        """Regression: a multi-block extension must STILL fork a shared,
+        partially-filled tail — the fork decision happens before fresh
+        blocks are appended, not on whatever block ends up last."""
+        m = PagedKVCacheManager(num_blocks=8, block_size=4)
+        m.allocate("p", 6)  # blocks [b0, b1], b1 half-full
+        m.fork("p", "c")
+        shared_tail = m.seqs["p"].blocks[1]
+        fresh = m.extend("c", 3)  # tokens 6-8: 2 into the tail, 1 overflow
+        assert len(fresh) == 2  # forked tail + one growth block
+        assert m.seqs["c"].blocks[1] != shared_tail  # tail forked
+        assert m.seqs["p"].blocks[1] == shared_tail  # parent untouched
+        assert m.refcount[shared_tail] == 1
+
+    def test_full_shared_tail_needs_no_fork(self):
+        """A block-aligned shared sequence grows into fresh blocks only —
+        the shared blocks are never written, so no fork."""
+        m = PagedKVCacheManager(num_blocks=8, block_size=4)
+        m.allocate("p", 8)  # two FULL blocks
+        m.fork("p", "c")
+        fresh = m.extend("c", 1)
+        assert len(fresh) == 1  # growth block only
+        assert m.seqs["c"].blocks[:2] == m.seqs["p"].blocks  # still shared
+
+    def test_out_of_blocks_mid_extend_leaks_nothing(self):
+        """A multi-block extend that exhausts the pool midway must leave the
+        manager consistent: blocks taken before the failure stay owned by
+        the sequence (not lost), and freeing the sequence returns them."""
+        m = PagedKVCacheManager(num_blocks=4, block_size=2)
+        m.allocate("a", 2)  # 1 block
+        m.allocate("other", 4)  # 2 blocks -> 1 block left
+        with pytest.raises(OutOfBlocksError):
+            m.extend("a", 6)  # needs 3 more blocks, only 1 available
+        # length must NOT have advanced past what was committed
+        assert m.length("a") == 2
+        m.free_seq("a")
+        m.free_seq("other")
+        assert m.blocks_in_use == 0
+        assert sorted(m.free, reverse=True) == list(
+            range(m.num_blocks - 1, -1, -1))
+        assert all(r == 0 for r in m.refcount)
+
+    def test_out_of_blocks_cow_fork_leaves_share_intact(self):
+        """When the COW fork itself hits exhaustion, the shared tail must
+        keep its refcount (no half-forked state)."""
+        m = PagedKVCacheManager(num_blocks=2, block_size=4)
+        m.allocate("p", 6)  # both blocks
+        m.fork("p", "c")
+        tail = m.seqs["p"].blocks[-1]
+        with pytest.raises(OutOfBlocksError):
+            m.extend("c", 1)  # tail is shared, fork needs a free block
+        assert m.refcount[tail] == 2  # share untouched
+        m.free_seq("c")
+        m.free_seq("p")
+        assert m.blocks_in_use == 0
+
+
+class TestConcurrentReserveRelease:
+    """ServeEngine._kv_reserve/_kv_release from many client threads: the
+    engine's lock discipline must keep the manager consistent and reject
+    over-subscription cleanly (backpressure, not corruption)."""
+
+    @pytest.fixture(scope="class")
+    def engine(self):
+        import jax
+
+        from repro.configs.registry import get_config
+        from repro.models import model as M
+        from repro.serving.engine import ServeEngine
+
+        cfg = get_config("internlm2_1_8b").reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServeEngine(cfg, params, max_seq=32, kv_blocks=24,
+                          kv_block_size=4)
+        yield eng
+        eng.close()
+
+    def test_many_streams_reserve_release(self, engine):
+        prompt = np.zeros((1, 6), np.int32)  # 6+2 tokens -> 2 blocks each
+        errors = []
+        admitted = []
+        lock = threading.Lock()
+
+        def worker(i):
+            try:
+                for _ in range(25):
+                    sid = engine._kv_reserve(f"t{i}", prompt, steps=2)
+                    with lock:
+                        admitted.append(sid)
+                    engine._kv_release(sid)
+            except OutOfBlocksError:
+                pass  # backpressure is a legal outcome, corruption is not
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(16)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert engine.kv.blocks_in_use == 0  # everything released
+        assert all(r == 0 for r in engine.kv.refcount)
+        assert len(set(admitted)) == len(admitted)  # unique seq ids
 
 
 class TestGatherSemantics:

@@ -1,7 +1,8 @@
 """End-to-end multi-server + continuous-batching serving: >=4 admitted
 streams over >=2 servers, batched greedy decode must reproduce the
-unbatched engine's tokens exactly (each slot row is computed independently
-inside the masked batch step)."""
+unbatched engine's tokens exactly — for BOTH decode-cache layouts: the
+masked-dense slot cache and the paged block-pool layout (slot compaction +
+block-table gather + length-bucketed batched prefill)."""
 
 import threading
 
@@ -107,6 +108,38 @@ class TestBatchedPoolServing:
         finally:
             eng.close()
 
+    @pytest.mark.parametrize("paged", [False, True])
+    def test_mixed_prompt_lengths_match_unbatched(self, setup, paged):
+        """Streams with different prompt lengths (different prefill buckets,
+        different live cache lengths) must each reproduce their own
+        unbatched tokens."""
+        cfg, params = setup
+        prompts = {f"m{i}": np.arange(1, n + 1, dtype=np.int32)[None, :] % 100
+                   for i, n in enumerate([2, 5, 9])}
+        want = {n: _reference_tokens(cfg, params, p)
+                for n, p in prompts.items()}
+
+        eng = ServeEngine(cfg, params, max_seq=32, num_servers=1,
+                          batching=True, max_batch=4, paged=paged)
+        try:
+            for i, n in enumerate(prompts):
+                assert eng.admit(_spec(n, 3 - i)).admitted
+            results = {}
+
+            def worker(n):
+                results[n] = eng.generate(n, prompts[n], steps=STEPS)
+
+            threads = [threading.Thread(target=worker, args=(n,))
+                       for n in prompts]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            for n in prompts:
+                assert results[n].tokens == want[n], n
+        finally:
+            eng.close()
+
     def test_concurrent_streams_coalesce(self, setup):
         """With one server and concurrently decoding streams, at least one
         device call must carry more than one request."""
@@ -133,3 +166,112 @@ class TestBatchedPoolServing:
             assert max(sizes) > 1, sizes
         finally:
             eng.close()
+
+
+class TestPagedPoolServing:
+    """Paged block-pool decode: bit-identical greedy tokens, slot
+    compaction, width bucketing, and block accounting."""
+
+    def test_four_streams_two_servers_match_unbatched(self, setup):
+        cfg, params = setup
+        prompt = np.array([[1, 2, 3, 4]], np.int32)
+        want = _reference_tokens(cfg, params, prompt)
+
+        eng = ServeEngine(cfg, params, max_seq=32, num_servers=2,
+                          batching=True, max_batch=4, paged=True,
+                          kv_block_size=8)
+        try:
+            names = [f"p{i}" for i in range(4)]
+            for i, n in enumerate(names):
+                assert eng.admit(_spec(n, 4 - i)).admitted
+            assert {eng.pool.server_of(n) for n in names} == {0, 1}
+
+            results = {}
+
+            def worker(n):
+                results[n] = eng.generate(n, prompt, steps=STEPS)
+
+            threads = [threading.Thread(target=worker, args=(n,))
+                       for n in names]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+
+            for n in names:
+                assert results[n].tokens == want, n
+            # every decode call reported its compaction/width decision
+            meta = [m for s in eng.pool.servers for m in s.stats.batch_meta]
+            decodes = [m for m in meta if m["kind"] == "decode"]
+            assert decodes
+            # prompt 4 + 6 steps <= 16 tokens -> 2 blocks of 8; width
+            # bucketing must never widen past the pow2 cover of that
+            assert all(m["width"] <= 2 for m in decodes)
+            prefills = [m for m in meta if m["kind"] == "prefill"]
+            assert prefills and all(m["bucket"] == 4 for m in prefills)
+            # all blocks released at job end (scratch block still held)
+            for st in eng._paged:
+                assert st.mgr.blocks_in_use == 1
+        finally:
+            eng.close()
+
+    def test_single_stream_compacts(self, setup):
+        """One live stream in an 8-slot server: the device call must shrink
+        to a single row (slot compaction at low occupancy)."""
+        cfg, params = setup
+        prompt = np.array([[7, 8, 9]], np.int32)
+        eng = ServeEngine(cfg, params, max_seq=64, num_servers=1,
+                          batching=True, max_batch=8, paged=True,
+                          kv_block_size=8)
+        try:
+            assert eng.admit(_spec("solo", 1)).admitted
+            res = eng.generate("solo", prompt, steps=4)
+            assert len(res.tokens) == 4
+            decodes = [m for m in eng.pool.servers[0].stats.batch_meta
+                       if m["kind"] == "decode"]
+            assert decodes
+            assert all(m["padded"] == 1 and m["compacted"] for m in decodes)
+        finally:
+            eng.close()
+
+    def test_precompile_visits_all_shape_buckets(self, setup):
+        """precompile() must walk every (rows, width) pow2 bucket so no
+        decode step ever hits a cold trace mid-traffic."""
+        cfg, params = setup
+        eng = ServeEngine(cfg, params, max_seq=32, num_servers=2,
+                          batching=True, max_batch=4, paged=True,
+                          kv_block_size=8)
+        try:
+            # rows in {1,2,4}, widths in {1,2,4} (nb_max=32/8), x2 servers
+            assert eng.precompile() == 9 * 2
+            before = eng._decode_paged._cache_size()
+            assert eng.admit(_spec("w", 1)).admitted
+            res = eng.generate("w", np.array([[1, 2, 3]], np.int32), steps=4)
+            assert len(res.tokens) == 4
+            assert eng._decode_paged._cache_size() == before  # no cold trace
+        finally:
+            eng.close()
+
+    def test_pool_exhaustion_rejects_before_dispatch(self, setup):
+        cfg, params = setup
+        from repro.serving.kvcache import OutOfBlocksError
+
+        eng = ServeEngine(cfg, params, max_seq=32, num_servers=1,
+                          batching=True, max_batch=2, paged=True,
+                          kv_block_size=8, kv_blocks=3)  # scratch + 2 blocks
+        try:
+            assert eng.admit(_spec("big", 1)).admitted
+            with pytest.raises(OutOfBlocksError):
+                # needs ceil((17+6)/8) = 3 blocks, only 2 available
+                eng.generate("big", np.zeros((1, 17), np.int32), steps=6)
+            assert eng._paged[0].mgr.blocks_in_use == 1  # nothing leaked
+        finally:
+            eng.close()
+
+    def test_paged_requires_supported_family(self):
+        from repro.configs.registry import get_config as gc
+
+        cfg = gc("deepseek_v2_lite_16b").reduced()  # MLA: no paged path yet
+        params = M.init_params(cfg, jax.random.PRNGKey(2))
+        with pytest.raises(ValueError, match="paged decode unsupported"):
+            ServeEngine(cfg, params, max_seq=32, batching=True, paged=True)

@@ -129,6 +129,32 @@ def test_pool_analysis_dominates_batched_simulation(seed):
 
 @given(seed=st.integers(0, 10_000))
 @settings(**_SETTINGS)
+def test_pool_analysis_dominates_under_bucketed_coalescing(seed):
+    """Length-bucketed prefill keys and slot compaction only NARROW which
+    requests may coalesce (the simulator's exact-signature rule is already
+    the strictest bucketing; smaller batch_max models fewer same-bucket
+    peers).  The per-request analysis bound never credits coalescing, so it
+    must dominate at EVERY coalescing width, down to none at all."""
+    rng = random.Random(seed)
+    params = GenParams(num_cores=4, num_tasks=(4, 10), epsilon_ms=0.05)
+    tasks = generate_taskset(params, rng)
+    system = allocate_pool(tasks, 2, 2, epsilon=params.epsilon_ms)
+    res = server_analysis.analyze_pool(system)
+    for batch_max in (1, 2, 4):
+        sim = simulator.simulate(system, mode="server_batched",
+                                 horizon_ms=_horizon(system),
+                                 batch_max=batch_max)
+        for t in system.tasks:
+            bound = res.wcrt(t.name)
+            if not math.isinf(bound):
+                assert sim.wcrt(t.name) <= bound + 1e-3, (
+                    f"{t.name} (batch_max={batch_max}): simulated "
+                    f"{sim.wcrt(t.name)} > pool analysis bound {bound}"
+                )
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
 def test_batching_never_delays_any_task(seed):
     """Coalescing only lets requests JOIN the head's device call: for the
     same system, every task's batched WCRT is <= its unbatched WCRT."""
