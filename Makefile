@@ -1,14 +1,19 @@
 # Test entry points.  `make test` is the tier-1 verify command from
 # ROADMAP.md; `make test-fast` is the same sweep with the @slow end-to-end
 # tests deselected (the quick pre-commit loop).  `make bench-smoke` is the
-# CI-sized paged-vs-masked-dense decode sweep; it writes
-# BENCH_paged_decode_smoke.json (the committed full-grid artifact is
-# BENCH_paged_decode.json from `--paged-sweep` without --smoke).
+# CI-sized benchmark pass: the paged-vs-masked-dense decode sweep (writes
+# BENCH_paged_decode_smoke.json; the committed full-grid artifact is
+# BENCH_paged_decode.json from `--paged-sweep` without --smoke) plus the
+# cost-model calibration loop.  `make bench-calibrate` runs the
+# calibration alone: measure cells -> fit surface -> calibrated-admission
+# capacity; writes BENCH_cost_model.json (tracked) and FAILS when the
+# median predicted-vs-measured relative error blows past its threshold or
+# calibrated admission stops beating the worst-case declaration.
 
 PYTEST = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 PYRUN = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast bench-smoke
+.PHONY: test test-fast bench-smoke bench-calibrate
 
 test:
 	$(PYTEST)
@@ -18,3 +23,7 @@ test-fast:
 
 bench-smoke:
 	$(PYRUN) benchmarks/batching_throughput.py --paged-sweep --smoke
+	$(PYRUN) benchmarks/cost_model_calibrate.py --smoke
+
+bench-calibrate:
+	$(PYRUN) benchmarks/cost_model_calibrate.py

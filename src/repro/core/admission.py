@@ -49,16 +49,31 @@ class AdmissionController:
     effective epsilon and admits strictly more task sets.  This is an
     OPTIMISTIC mode — sound only while the batch-size guarantee holds; with
     the default min_batch=1 it is exactly the paper's unconditional bound.
+
+    ``cost_model`` switches on CALIBRATED admission: a stream admitted with
+    a shape-cell hint (``try_admit(stream, cell=...)``) has its GPU
+    segments re-priced at ``min(declared, safety * predicted)`` for that
+    cell (``analysis.cost_model.StepCostModel.recost``) before the
+    Eqs (1)-(6) check runs.  Declared costs are the full-width worst case
+    (the (max_batch, nb_max) trace); the calibrated cost is the measured/
+    interpolated cost of the bucket the stream actually runs in, so
+    calibrated mode admits a superset of the worst-case sets (the analysis
+    is monotone in segment costs and min() never re-prices upward) while
+    the per-server bounds still dominate execution that honors the
+    calibrated costs.  Streams admitted without a cell keep their declared
+    costs — an empty or absent model is exactly the uncalibrated mode.
     """
 
     def __init__(self, num_cores: int, *, epsilon_ms: float = 0.05,
-                 heuristic: str = "wfd", min_batch: int = 1):
+                 heuristic: str = "wfd", min_batch: int = 1,
+                 cost_model=None):
         if min_batch < 1:
             raise ValueError(f"min_batch must be >= 1, got {min_batch}")
         self.num_cores = num_cores
         self.epsilon = epsilon_ms
         self.heuristic = heuristic
         self.min_batch = min_batch
+        self.cost_model = cost_model
         self.streams: list[Task] = []
 
     @property
@@ -85,11 +100,18 @@ class AdmissionController:
         misses = [n for n, w in res.response_times.items() if not w <= _deadline(tasks, n)]
         return AdmissionDecision(False, f"deadline miss for {misses}", res.response_times)
 
-    def try_admit(self, stream: Task) -> AdmissionDecision:
+    def try_admit(self, stream: Task, *, cell=None) -> AdmissionDecision:
+        """``cell``: the cost-model shape cell(s) this stream's GPU
+        segments run in (one CellKey broadcast to every segment, or a
+        per-segment sequence); only meaningful with ``cost_model`` set."""
         if any(t.name == stream.name for t in self.streams):
             return AdmissionDecision(False, f"duplicate stream name {stream.name!r}")
+        if self.cost_model is not None and cell is not None:
+            stream = self.cost_model.recost(stream, cell)
         decision = self._check([*self.streams, stream])
         if decision.admitted:
+            # the CALIBRATED task is what was proven schedulable; later
+            # admission checks must re-analyze against that pricing
             self.streams.append(stream)
         return decision
 
@@ -136,10 +158,11 @@ class PoolAdmissionController:
 
     def __init__(self, num_devices: int, *, cores_per_device: int = 2,
                  epsilon_ms: float = 0.05, heuristic: str = "wfd",
-                 min_batch: int = 1):
+                 min_batch: int = 1, cost_model=None):
         self.devices = [
             AdmissionController(cores_per_device, epsilon_ms=epsilon_ms,
-                                heuristic=heuristic, min_batch=min_batch)
+                                heuristic=heuristic, min_batch=min_batch,
+                                cost_model=cost_model)
             for _ in range(num_devices)
         ]
         self.placement: dict[str, int] = {}
@@ -154,15 +177,18 @@ class PoolAdmissionController:
     def device_of(self, name: str) -> int:
         return self.placement[name]
 
-    def try_admit(self, stream: Task) -> tuple[AdmissionDecision, int]:
-        """Returns (decision, device); device is -1 when rejected."""
+    def try_admit(self, stream: Task, *,
+                  cell=None) -> tuple[AdmissionDecision, int]:
+        """Returns (decision, device); device is -1 when rejected.
+        ``cell`` is the calibrated-admission shape hint, forwarded to the
+        per-device controller (see ``AdmissionController.try_admit``)."""
         if stream.name in self.placement:
             return (AdmissionDecision(
                 False, f"duplicate stream name {stream.name!r}"), -1)
         order = sorted(range(self.num_devices), key=self.gpu_utilization)
         last = AdmissionDecision(False, "no devices")
         for d in order:
-            decision = self.devices[d].try_admit(stream)
+            decision = self.devices[d].try_admit(stream, cell=cell)
             if decision.admitted:
                 self.placement[stream.name] = d
                 return decision, d

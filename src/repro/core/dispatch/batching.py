@@ -29,6 +29,18 @@ land in ``stats.batch_meta`` next to ``batch_sizes`` so the analysis side
 (and tests) can audit that compaction/bucketing only ever SHRANK the device
 call — the declared per-request WCET is the full-width call, which is what
 keeps the per-server bounds (Eqs (1)-(6)) sound under both knobs.
+
+The measurement -> fit -> admission loop rides the same channel.  Each meta
+entry carries the call's timed duration (``seconds``) next to its shape
+decision; ``ServerStats.record_meta`` folds it into a bounded ring buffer
+plus a running per-cell aggregate keyed by ``server_runtime.cell_key`` —
+``("decode", padded_rows, table_width)`` or ``("prefill", padded_rows,
+len_bucket)``, the post-bucketing shape naming the jit trace that ran.
+``analysis.cost_model.StepCostModel.ingest`` consumes those aggregates to
+fit per-cell step-cost surfaces, which in turn drive calibrated admission
+(``core.admission`` with ``cost_model=``), bucket auto-tuning
+(``cost_model.autotune_buckets`` -> ``ServeEngine.tune_buckets``), and
+traffic-aware precompilation (``ServeEngine.precompile(traffic=...)``).
 """
 
 from __future__ import annotations
@@ -87,8 +99,10 @@ class BatchingServer(AcceleratorServer):
     def record_meta(self, **decision) -> None:
         """Called by ``run_batch`` callables (on this server's thread) to
         surface per-call shape decisions — compaction, padding bucket, KV
-        gather width — into ``stats.batch_meta``."""
-        self.stats.batch_meta.append(decision)
+        gather width, measured ``seconds`` — into the bounded
+        ``stats.batch_meta`` ring and the running ``stats.cell_stats``
+        per-cell aggregates the cost model consumes."""
+        self.stats.record_meta(decision)
 
     # -- internals ---------------------------------------------------------
     def _dequeue_locked(self) -> list[Request]:

@@ -26,7 +26,7 @@ from dataclasses import dataclass
 from typing import Any, Callable, Hashable
 
 from repro.core.dispatch.batching import BatchingServer, BatchRequest
-from repro.core.server_runtime import AcceleratorServer, Request
+from repro.core.server_runtime import AcceleratorServer, CellStats, Request
 
 __all__ = ["ServerPool", "StreamAssignment"]
 
@@ -115,6 +115,24 @@ class ServerPool:
         return server.submit_batch(payload, run_batch=run_batch,
                                    batch_key=batch_key, priority=priority,
                                    deadline=deadline, name=name)
+
+    # -- measurement export ------------------------------------------------
+    def cell_stats(self) -> dict:
+        """Per-cell device-call aggregates merged across every server in the
+        pool — one measurement table for the whole device fleet, in the
+        shape ``analysis.cost_model.StepCostModel.ingest`` consumes.  The
+        servers share jitted step functions (one engine), so same-cell calls
+        on different devices price identically and pooling them is sound."""
+        merged: dict = {}
+        for s in self.servers:
+            for key, cell in s.stats.cell_stats.items():
+                if key in merged:
+                    merged[key].merge(cell)
+                else:
+                    acc = CellStats()
+                    acc.merge(cell)
+                    merged[key] = acc
+        return merged
 
     # -- lifecycle ---------------------------------------------------------
     def shutdown(self, *, drain: bool = True, timeout: float = 30.0) -> None:

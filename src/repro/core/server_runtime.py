@@ -25,14 +25,85 @@ Beyond-paper extensions (used by serving; each is off by default):
 from __future__ import annotations
 
 import heapq
+import math
 import threading
 import time
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from repro.core.dispatch.policy import ORDERINGS, request_key
 
-__all__ = ["AcceleratorServer", "Request", "ServerStats"]
+__all__ = ["AcceleratorServer", "CellStats", "Request", "ServerStats",
+           "cell_key", "BATCH_META_CAP"]
+
+# Ring-buffer capacity of the raw per-call shape-decision log.  Sustained
+# traffic makes one entry per device call, so an unbounded list is a memory
+# leak; the capped ring keeps the recent window for debugging while the
+# running per-cell aggregates (``ServerStats.cell_stats``) carry the full
+# history the cost model consumes.
+BATCH_META_CAP = 4096
+
+
+def cell_key(meta: dict) -> tuple | None:
+    """Canonical cost-model cell of one ``batch_meta`` entry.
+
+    Decode calls map to ``("decode", padded_rows, table_width)`` and
+    bucketed prefills to ``("prefill", padded_rows, len_bucket)`` — i.e. the
+    post-bucketing shape that names the jit trace the call ran under, which
+    is exactly the granularity ``analysis.cost_model`` prices.  Entries
+    without a recognizable shape decision return None (not aggregated).
+    """
+    kind = meta.get("kind")
+    if kind == "decode" and "padded" in meta and "width" in meta:
+        return ("decode", int(meta["padded"]), int(meta["width"]))
+    if kind == "prefill" and "padded" in meta and "bucket" in meta:
+        return ("prefill", int(meta["padded"]), int(meta["bucket"]))
+    return None
+
+
+@dataclass
+class CellStats:
+    """Running aggregate of one shape cell's device calls (Welford over the
+    measured call durations, when the dispatcher reports them)."""
+
+    calls: int = 0
+    rows: int = 0  # sum of TRUE (pre-padding) rows across calls
+    timed: int = 0  # calls that carried a ``seconds`` measurement
+    mean_s: float = 0.0
+    m2_s: float = 0.0
+    min_s: float = math.inf
+    max_s: float = 0.0
+
+    def add(self, meta: dict) -> None:
+        self.calls += 1
+        self.rows += int(meta.get("rows", 0))
+        s = meta.get("seconds")
+        if s is not None:
+            self.timed += 1
+            d = s - self.mean_s
+            self.mean_s += d / self.timed
+            self.m2_s += d * (s - self.mean_s)
+            self.min_s = min(self.min_s, s)
+            self.max_s = max(self.max_s, s)
+
+    def merge(self, other: "CellStats") -> None:
+        """Fold ``other`` into self (parallel Welford merge) — used to pool
+        per-server aggregates into one cost-model input."""
+        self.calls += other.calls
+        self.rows += other.rows
+        if other.timed:
+            n1, n2 = self.timed, other.timed
+            d = other.mean_s - self.mean_s
+            self.timed = n1 + n2
+            self.mean_s += d * n2 / self.timed
+            self.m2_s += other.m2_s + d * d * n1 * n2 / self.timed
+            self.min_s = min(self.min_s, other.min_s)
+            self.max_s = max(self.max_s, other.max_s)
+
+    @property
+    def var_s(self) -> float:
+        return self.m2_s / self.timed if self.timed > 1 else 0.0
 
 
 @dataclass(order=False)
@@ -85,8 +156,25 @@ class ServerStats:
     batch_sizes: list[int] = field(default_factory=list)
     # shape decisions the run_batch callable reports per device call
     # (BatchingServer.record_meta): e.g. paged decode {rows, padded, width,
-    # compacted} or bucketed prefill {rows, padded, bucket}
-    batch_meta: list[dict] = field(default_factory=list)
+    # compacted, seconds} or bucketed prefill {rows, padded, bucket,
+    # seconds}.  Capped ring buffer — the recent window only; the per-cell
+    # aggregates below carry the full history.
+    batch_meta: deque = field(
+        default_factory=lambda: deque(maxlen=BATCH_META_CAP))
+    # running per-cell aggregate keyed by ``cell_key(meta)`` — the cost
+    # model's measurement input (analysis.cost_model.StepCostModel.ingest)
+    cell_stats: dict = field(default_factory=dict)
+
+    def record_meta(self, meta: dict) -> None:
+        """Log one device call's shape decision: append to the bounded ring
+        and fold into the matching cell aggregate."""
+        self.batch_meta.append(meta)
+        key = cell_key(meta)
+        if key is not None:
+            cell = self.cell_stats.get(key)
+            if cell is None:
+                cell = self.cell_stats[key] = CellStats()
+            cell.add(meta)
 
 
 class AcceleratorServer:

@@ -52,6 +52,7 @@ Architecture (one engine per host; one server per device / mesh slice):
 
 from __future__ import annotations
 
+import math
 import threading
 import time
 from dataclasses import dataclass, field
@@ -60,6 +61,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis.cost_model import autotune_buckets, bucket_up
 from repro.core.admission import PoolAdmissionController
 from repro.core.dispatch.pool import ServerPool
 from repro.core.task_model import GpuSegment, Task
@@ -73,6 +75,32 @@ def _pow2ceil(n: int) -> int:
     compacted batch rows, prefill pad lengths, and block-table widths —
     bounds the number of distinct jit traces to O(log) per dimension."""
     return 1 << max(n - 1, 0).bit_length()
+
+
+def _pow2_ladder(cap: int) -> tuple[int, ...]:
+    """Every bucket the pow2-with-clamp rule can produce up to ``cap``:
+    1, 2, 4, ... plus ``cap`` itself when cap is not a power of two (the
+    runtime clamps ``_pow2ceil`` to the cap, so e.g. max_batch=6 makes the
+    live-row counts 5..6 land in a SIX-row cell, not an eight-row one)."""
+    out = []
+    v = 1
+    while v < cap:
+        out.append(v)
+        v *= 2
+    out.append(cap)
+    return tuple(out)
+
+
+@dataclass
+class PrecompileReport:
+    """What one ``precompile()`` call did: ``compiled`` distinct traces
+    warmed now, ``skipped`` reachable/requested cells NOT traced (already
+    warm from an earlier call, or filtered out by the traffic model)."""
+
+    compiled: int = 0
+    skipped: int = 0
+    decode_cells: tuple = ()
+    prefill_cells: tuple = ()
 
 
 @dataclass
@@ -137,13 +165,14 @@ class ServeEngine:
                  epsilon_ms: float = 0.05, kv_blocks: int = 0,
                  kv_block_size: int = 16, num_servers: int = 1,
                  batching: bool = False, max_batch: int = 8,
-                 paged: bool = False):
+                 paged: bool = False, cost_model=None):
         self.cfg = cfg
         self.params = params
         self.max_seq = max_seq
         self.batch_size = batch_size
         self.batching = batching
         self.max_batch = max_batch
+        self.cost_model = cost_model
         if paged and not batching:
             raise ValueError("paged=True requires batching=True (the block "
                              "pools are the batched decode cache layout)")
@@ -161,7 +190,7 @@ class ServeEngine:
                                name="serve-engine")
         self.admission = PoolAdmissionController(
             num_servers, cores_per_device=admission_cores,
-            epsilon_ms=epsilon_ms)
+            epsilon_ms=epsilon_ms, cost_model=cost_model)
         self.straggler = DeadlineAwarePolicy()
         # optional paged-KV accounting for the UNBATCHED path: generate()
         # holds block allocations for its sequence's lifetime; exhaustion
@@ -180,6 +209,17 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, b, c: M.apply(cfg, p, b, mode="decode", cache=c))
         self._streams: dict[str, StreamSpec] = {}
+        # shape-bucket boundaries (tunable via tune_buckets()): batch rows
+        # and prefill pad lengths default to the full pow2 ladder — exactly
+        # the cells the pow2-with-clamp rules could already produce
+        self._row_buckets = _pow2_ladder(max_batch)
+        self.prefill_buckets = _pow2_ladder(max_seq)
+        self.width_buckets: tuple[int, ...] = ()
+        # cells warmed by precompile(); consulted by the safe-fallback
+        # bump-up in the hot path (engine-level: the jitted step callables
+        # are shared across servers, so one trace warms the whole pool)
+        self._warm_decode: set[tuple[int, int]] = set()
+        self._warm_prefill: set[tuple[int, int]] = set()
         if batching:
             self._slots = [_SlotState(max_batch) for _ in range(num_servers)]
             self._batch_axes = _cache_batch_axes(cfg, max_seq)
@@ -195,6 +235,7 @@ class ServeEngine:
                             max_seq)
                 for _ in range(num_servers)
             ]
+            self.width_buckets = _pow2_ladder(self._paged[0].nb_max)
             # the pools argument is donated in both jits: pool updates must
             # alias, not copy — the pool is owned by the server thread and
             # immediately replaced by the call's output
@@ -209,13 +250,18 @@ class ServeEngine:
         return self.pool.servers[0]
 
     # -- stream admission (analysis-driven, Eqs (1)-(6) per partition) -----
-    def admit(self, spec: StreamSpec):
+    def admit(self, spec: StreamSpec, *, cell=None):
+        """``cell``: optional cost-model shape hint (one CellKey broadcast
+        to all segments, or a per-segment sequence) enabling CALIBRATED
+        admission when the engine was built with a ``cost_model`` — declared
+        worst-case segment costs are re-priced to the measured/interpolated
+        cost of the bucket the stream actually runs in (never upward)."""
         segs = (GpuSegment(e=spec.prefill_ms * 0.9, m=spec.prefill_ms * 0.1),
                 *(GpuSegment(e=spec.decode_ms * 0.9, m=spec.decode_ms * 0.1),)
                 * spec.decode_steps)
         task = Task(name=spec.name, C=spec.cpu_ms, T=spec.period_ms,
                     D=spec.deadline_ms, segments=segs, priority=spec.priority)
-        decision, device = self.admission.try_admit(task)
+        decision, device = self.admission.try_admit(task, cell=cell)
         if decision.admitted:
             self._streams[spec.name] = spec
             self.straggler.register(spec.name, spec.deadline_ms)
@@ -228,6 +274,55 @@ class ServeEngine:
         self.admission.remove(name)
         self.pool.remove(name)
         self._streams.pop(name, None)
+
+    # -- bucket auto-tuning (cost-model driven) ----------------------------
+    def tune_buckets(self, prompt_lengths, *, steps_hint: int = 0,
+                     cost_model=None, max_buckets: int = 4):
+        """Pick the prefill-length and (paged) gather-width bucket
+        boundaries for an expected workload: exact DP over the pow2
+        candidate ladder minimizing total padding waste — or, when a fitted
+        ``cost_model`` (default: the engine's own) can price the phase,
+        total PREDICTED step cost, which weights waste by what it actually
+        costs on this device.  The largest candidate always survives
+        (coverage), so runtime clamping semantics are unchanged.  Call
+        BEFORE precompile()/traffic — retuning invalidates warm cells, so
+        this clears both warm sets.  Returns (prefill_buckets,
+        width_buckets)."""
+        model = cost_model if cost_model is not None else self.cost_model
+        lengths = [int(l) for l in prompt_lengths]
+        if any(l > self.max_seq for l in lengths):
+            raise ValueError("prompt length exceeds max_seq")
+
+        def priced(phase, rows):
+            if model is None:
+                return None
+            probe = model.predict(phase, rows, _pow2_ladder(self.max_seq)[-1])
+            if not math.isfinite(probe):
+                return None  # phase unmeasured: fall back to padding waste
+            return lambda bucket, value: model.predict(phase, rows, bucket)
+
+        self.prefill_buckets = autotune_buckets(
+            lengths or [1], _pow2_ladder(self.max_seq),
+            max_buckets=max_buckets, cost_of=priced("prefill", 1))
+        if self.paged:
+            bs = self.kv_block_size
+            nb_max = self._paged[0].nb_max
+            # widths are driven by each stream's FINAL length (the widest
+            # gather its decode steps reach): ceil((len + steps + 1) / bs)
+            needs = [min(nb_max, -(-(l + steps_hint + 1) // bs))
+                     for l in lengths] or [1]
+            wmodel = None
+            if model is not None:
+                probe = model.predict("decode", 1, nb_max)
+                if math.isfinite(probe):
+                    wmodel = lambda bucket, value: model.predict(
+                        "decode", 1, bucket)
+            self.width_buckets = autotune_buckets(
+                needs, _pow2_ladder(nb_max), max_buckets=max_buckets,
+                cost_of=wmodel)
+        self._warm_decode.clear()
+        self._warm_prefill.clear()
+        return self.prefill_buckets, self.width_buckets
 
     # -- batched decode internals (masked-dense layout) --------------------
     def _insert_impl(self, full, batched, src_row, slot):
@@ -354,9 +449,22 @@ class ServeEngine:
             state = self._paged[si]
             bs = state.mgr.block_size
             n = len(payloads)
-            n_pad = min(self.max_batch, _pow2ceil(n))
+            n_pad = bucket_up(n, self._row_buckets)
             need = max(-(-(length + 1) // bs) for _, _, length in payloads)
-            w = min(state.nb_max, _pow2ceil(need))
+            w = bucket_up(need, self.width_buckets)
+            # safe fallback: a cold cell mid-traffic would stall the server
+            # behind XLA compilation, so bump to the cheapest WARM cell that
+            # covers it (widening is sound: extra width lanes gather the
+            # all-zero scratch block past each row's length, extra rows
+            # duplicate row 0 idempotently).  No warm cover -> compile cold.
+            cold = False
+            if self._warm_decode and (n_pad, w) not in self._warm_decode:
+                covers = [c for c in self._warm_decode
+                          if c[0] >= n_pad and c[1] >= w]
+                if covers:
+                    n_pad, w = min(covers, key=lambda c: c[0] * c[1])
+                else:
+                    cold = True
             pack = state.pack_scratch
             for i, (token, table, length) in enumerate(payloads):
                 pack[i, 0] = token
@@ -364,13 +472,17 @@ class ServeEngine:
                 pack[i, 2:] = table
             for i in range(n, n_pad):  # idempotent padding rows
                 pack[i] = pack[0]
+            t0 = time.monotonic()
             logits, state.pools = jax.block_until_ready(
                 self._decode_paged(self.params,
                                    jnp.asarray(pack[:n_pad, : 2 + w]),
                                    state.pools))
+            dt = time.monotonic() - t0
+            if cold:  # now traced: later hits on this cell are warm
+                self._warm_decode.add((n_pad, w))
             self.pool.servers[si].record_meta(
                 kind="decode", rows=n, padded=n_pad, width=w,
-                compacted=n_pad < self.max_batch)
+                compacted=n_pad < self.max_batch, seconds=dt, cold=cold)
             rows = np.asarray(logits)[:, -1]
             return [rows[i] for i in range(n)]
 
@@ -413,7 +525,18 @@ class ServeEngine:
 
         def run(payloads):
             n = len(payloads)
-            n_pad = min(self.max_batch, _pow2ceil(n))
+            n_pad = bucket_up(n, self._row_buckets)
+            # safe fallback on the ROW axis (the bucket axis was already
+            # steered to a warm pad length by _generate_batched): padding
+            # rows duplicate row 0 and their outputs are discarded
+            cold = False
+            if self._warm_prefill and (n_pad, bucket) not in self._warm_prefill:
+                covers = [r for r, b in self._warm_prefill
+                          if b == bucket and r >= n_pad]
+                if covers:
+                    n_pad = min(covers)
+                else:
+                    cold = True
             toks = np.zeros((n_pad, bucket), np.int32)
             lens = np.zeros((n_pad,), np.int32)
             for i, (prompt, true_len) in enumerate(payloads):
@@ -424,86 +547,118 @@ class ServeEngine:
                 lens[i] = lens[0]
             batch = self._prefill_batch(toks)
             batch["lengths"] = jnp.asarray(lens)
+            t0 = time.monotonic()
             logits, cache, _ = jax.block_until_ready(
                 self._prefill(self.params, batch))
+            dt = time.monotonic() - t0
+            if cold:
+                self._warm_prefill.add((n_pad, bucket))
             self.pool.servers[si].record_meta(
-                kind="prefill", rows=n, padded=n_pad, bucket=bucket)
+                kind="prefill", rows=n, padded=n_pad, bucket=bucket,
+                seconds=dt, cold=cold)
             rows = np.asarray(logits[np.arange(n), lens[:n] - 1], np.float32)
             return [(rows[i], cache, i) for i in range(n)]
 
         return run
 
-    def precompile(self, prompt_buckets: tuple[int, ...] = ()) -> int:
-        """Compile every batched-decode/prefill shape bucket ahead of time.
+    def precompile(self, prompt_buckets: tuple[int, ...] = (), *,
+                   traffic=None) -> PrecompileReport:
+        """Warm batched-decode/prefill shape cells ahead of time.
 
         Shape bucketing bounds the trace count to O(log(max_batch) *
         log(max_seq/block_size)) for paged decode plus O(log(max_batch))
-        per prefill length bucket, but a bucket first hit mid-traffic
-        would stall the whole server behind XLA compilation — a serving
-        engine warms them BEFORE taking load (the dummy inserts scribble on
+        per prefill length bucket, but a cell first hit mid-traffic would
+        stall the whole server behind XLA compilation — a serving engine
+        warms them BEFORE taking load (the dummy inserts scribble on
         slot/scratch state, so never call this while streams are live).
-        ``prompt_buckets`` lists the power-of-two prefill pad lengths to
-        warm (from the expected prompt-length distribution).  Runs on each
-        server's own thread (serialized with its batches); slot caches /
-        pools are created as a side effect.  Returns the number of shape
-        buckets visited.  No-op unless batching."""
+        ``prompt_buckets`` lists prefill pad lengths to warm (snapped up
+        into ``prefill_buckets``).  ``traffic`` — a
+        ``cost_model.TrafficModel`` or an iterable of CellKeys — restricts
+        compilation to the predicted-hit cells PLUS, always, the largest
+        cell on each phase: the safe-fallback target the hot path bumps
+        cold cells up to (see _run_paged_decode).  Each distinct cell is
+        traced ONCE (the jitted step callables are shared across servers);
+        cells already warm from an earlier call are skipped, and the report
+        says how many traces were skipped vs compiled.  Pools / slot caches
+        are still created on every server.  No-op unless batching."""
         if not self.batching:
-            return 0
-        visited = 0
+            return PrecompileReport()
+        hot = None
+        if traffic is not None:
+            hot = (set(traffic.hot_cells())
+                   if hasattr(traffic, "hot_cells") else set(traffic))
+        rows_ladder = self._row_buckets
+        if self.paged:
+            reachable_d = [(r, w) for r in rows_ladder
+                           for w in self.width_buckets]
+            fb_d = (rows_ladder[-1], self.width_buckets[-1])
+        else:
+            # masked-dense always runs the one full-shape trace
+            reachable_d = [(self.max_batch, 0)]
+            fb_d = reachable_d[0]
+        plan_d = [c for c in reachable_d
+                  if hot is None or c == fb_d or ("decode", *c) in hot]
+        todo_d = [c for c in plan_d if c not in self._warm_decode]
+        buckets = sorted({bucket_up(b, self.prefill_buckets)
+                          for b in prompt_buckets})
+        reachable_p = [(r, b) for b in buckets for r in rows_ladder]
+        fb_p = (rows_ladder[-1], buckets[-1]) if buckets else None
+        plan_p = [c for c in reachable_p
+                  if hot is None or c == fb_p or ("prefill", *c) in hot]
+        todo_p = [c for c in plan_p if c not in self._warm_prefill]
         for si in range(len(self.pool.servers)):
-            visited += self.pool.servers[si].submit(
-                lambda si=si: self._precompile_server(si, prompt_buckets),
+            # traces are shared: run the compile plan on server 0 only;
+            # the other servers just get their pools/caches initialized
+            d = todo_d if si == 0 else []
+            p = todo_p if si == 0 else []
+            self.pool.servers[si].submit(
+                lambda si=si, d=d, p=p: self._precompile_server(si, d, p),
                 name=f"precompile-{si}").wait()
-        return visited
+        self._warm_decode.update(todo_d)
+        self._warm_prefill.update(todo_p)
+        skipped = ((len(reachable_d) - len(todo_d))
+                   + (len(reachable_p) - len(todo_p)))
+        return PrecompileReport(compiled=len(todo_d) + len(todo_p),
+                                skipped=skipped,
+                                decode_cells=tuple(todo_d),
+                                prefill_cells=tuple(todo_p))
 
-    def _precompile_server(self, si: int, prompt_buckets) -> int:
-        n = 0
+    def _precompile_server(self, si: int, decode_cells, prefill_cells):
         if self.paged:
             state = self._paged[si]
             if state.pools is None:
                 state.pools = M.init_paged_cache(
                     self.cfg, state.mgr.num_blocks, state.mgr.block_size)
-            rows = 1
-            while rows <= self.max_batch:
-                w = 1
-                while w <= state.nb_max:
-                    # dummy batch: every row scatters token 0 at offset 0
-                    # of the scratch block (idempotent duplicates)
-                    pack = np.zeros((rows, 2 + w), np.int32)
-                    pack[:, 2:] = state.scratch_block
-                    _, state.pools = jax.block_until_ready(
-                        self._decode_paged(self.params, jnp.asarray(pack),
-                                           state.pools))
-                    n += 1
-                    w *= 2
-                rows *= 2
+            for rows, w in decode_cells:
+                # dummy batch: every row scatters token 0 at offset 0
+                # of the scratch block (idempotent duplicates)
+                pack = np.zeros((rows, 2 + w), np.int32)
+                pack[:, 2:] = state.scratch_block
+                _, state.pools = jax.block_until_ready(
+                    self._decode_paged(self.params, jnp.asarray(pack),
+                                       state.pools))
         else:
             state = self._slots[si]
             if state.cache is None:
                 state.cache = M.init_cache(self.cfg, self.max_batch,
                                            self.max_seq)
-            toks = jnp.zeros((self.max_batch, 1), jnp.int32)
-            active = jnp.zeros((self.max_batch,), bool)  # all-masked: no-op
-            _, state.cache = jax.block_until_ready(
-                self._decode_masked(self.params, toks, state.cache, active))
-            n += 1
-        for bucket in prompt_buckets:
-            rows = 1
-            while rows <= self.max_batch:
-                batch = self._prefill_batch(np.zeros((rows, bucket),
-                                                     np.int32))
-                batch["lengths"] = jnp.ones((rows,), jnp.int32)
-                _, cache, _ = jax.block_until_ready(
-                    self._prefill(self.params, batch))
-                if self.paged:
-                    table = np.full((self._paged[si].nb_max,),
-                                    self._paged[si].scratch_block, np.int32)
-                    self._insert_slot_paged(si, cache, 0, table)
-                else:
-                    self._insert_slot(si, 0, cache, 0)
-                n += 2
-                rows *= 2
-        return n
+            for _cell in decode_cells:
+                toks = jnp.zeros((self.max_batch, 1), jnp.int32)
+                active = jnp.zeros((self.max_batch,), bool)  # all-masked
+                _, state.cache = jax.block_until_ready(
+                    self._decode_masked(self.params, toks, state.cache,
+                                        active))
+        for rows, bucket in prefill_cells:
+            batch = self._prefill_batch(np.zeros((rows, bucket), np.int32))
+            batch["lengths"] = jnp.ones((rows,), jnp.int32)
+            _, cache, _ = jax.block_until_ready(
+                self._prefill(self.params, batch))
+            if self.paged:
+                table = np.full((self._paged[si].nb_max,),
+                                self._paged[si].scratch_block, np.int32)
+                self._insert_slot_paged(si, cache, 0, table)
+            else:
+                self._insert_slot(si, 0, cache, 0)
 
     # -- generation ---------------------------------------------------------
     def generate(self, name: str, prompt: np.ndarray, *, steps: int,
@@ -562,7 +717,16 @@ class ServeEngine:
         si = self.pool.server_of(name)
         res = GenerationResult()
         true_len = prompt.shape[1]
-        bucket = min(_pow2ceil(true_len), self.max_seq)
+        bucket = bucket_up(true_len, self.prefill_buckets)
+        if self._warm_prefill:
+            # traffic-aware precompile warmed a subset of pad lengths:
+            # steer to the smallest warm bucket that fits rather than cold-
+            # compiling the tight one (padding tokens' KV lands in owned
+            # blocks; per-row true lengths mask them out of attention)
+            warm = sorted({b for _r, b in self._warm_prefill
+                           if b >= true_len})
+            if warm:
+                bucket = warm[0]
         if true_len + steps > self.max_seq:
             raise ValueError(f"prompt {true_len} + steps {steps} exceeds "
                              f"max_seq {self.max_seq}")

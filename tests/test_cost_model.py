@@ -1,0 +1,359 @@
+"""Calibrated step-cost model: measurement intake, surface fitting,
+bucket auto-tuning, and the two soundness properties calibrated admission
+rests on — (1) calibrated admission accepts a SUPERSET of the tasksets the
+worst-case-declared admission accepts (with at least one strict win), and
+(2) the per-server analysis bounds still dominate the simulated WCRT when
+both run on the same calibrated costs.
+
+``hypothesis`` is optional: ``given(seed=...)`` degrades to a fixed seed
+sweep when it is missing (same pattern as test_simulator_property.py).
+"""
+
+import math
+import random
+
+import pytest
+
+try:
+    from hypothesis import HealthCheck, given, settings
+    from hypothesis import strategies as st
+
+    _SETTINGS = dict(
+        max_examples=25,
+        deadline=None,
+        suppress_health_check=[HealthCheck.too_slow],
+    )
+except ImportError:  # deterministic fallback sampler
+    _FALLBACK_SEEDS = list(range(0, 10_000, 401))
+
+    def given(**kwargs):
+        names = sorted(kwargs)
+        if names != ["seed"]:
+            raise NotImplementedError(f"fallback only supports seed=, got {names}")
+        return pytest.mark.parametrize("seed", _FALLBACK_SEEDS)
+
+    def settings(**_kwargs):
+        return lambda f: f
+
+    class _IntRange:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+    class st:  # noqa: N801 - mimics hypothesis.strategies
+        integers = staticmethod(_IntRange)
+
+    _SETTINGS = {}
+
+from repro.analysis.cost_model import (
+    StepCostModel,
+    TrafficModel,
+    autotune_buckets,
+    bucket_up,
+)
+from repro.core import server_analysis, simulator
+from repro.core.admission import AdmissionController
+from repro.core.allocation import allocate_pool
+from repro.core.server_runtime import (
+    BATCH_META_CAP,
+    CellStats,
+    ServerStats,
+    cell_key,
+)
+from repro.core.task_model import GpuSegment, Task
+from repro.core.taskset_gen import GenParams, generate_taskset
+
+
+# -- cell keys and running aggregates (satellite: bounded batch_meta) ------
+
+class TestCellBookkeeping:
+    def test_cell_key_maps_batch_meta(self):
+        assert cell_key({"kind": "decode", "rows": 3, "padded": 4,
+                         "width": 2}) == ("decode", 4, 2)
+        assert cell_key({"kind": "prefill", "rows": 1, "padded": 2,
+                         "bucket": 16}) == ("prefill", 2, 16)
+        assert cell_key({"kind": "decode", "rows": 3}) is None
+        assert cell_key({"kind": "insert"}) is None
+
+    def test_batch_meta_ring_buffer_is_bounded(self):
+        stats = ServerStats()
+        n = BATCH_META_CAP + 500
+        for i in range(n):
+            stats.record_meta({"kind": "decode", "rows": 1, "padded": 1,
+                               "width": 1, "seconds": 0.001})
+        # the raw trail is capped ...
+        assert len(stats.batch_meta) == BATCH_META_CAP
+        # ... but the running aggregate saw every call
+        cell = stats.cell_stats[("decode", 1, 1)]
+        assert cell.calls == n and cell.timed == n
+        assert cell.mean_s == pytest.approx(0.001)
+
+    def test_cell_stats_welford_and_merge(self):
+        a, b = CellStats(), CellStats()
+        xs, ys = [0.001, 0.002, 0.003], [0.004, 0.005]
+        for x in xs:
+            a.add({"seconds": x, "rows": 2})
+        for y in ys:
+            b.add({"seconds": y, "rows": 1})
+        a.merge(b)
+        allv = xs + ys
+        assert a.timed == 5 and a.rows == 8
+        assert a.mean_s == pytest.approx(sum(allv) / 5)
+        mean = sum(allv) / 5
+        assert a.var_s == pytest.approx(
+            sum((v - mean) ** 2 for v in allv) / 5)
+        assert a.min_s == pytest.approx(min(allv))
+        assert a.max_s == pytest.approx(max(allv))
+
+    def test_merge_into_empty(self):
+        a, b = CellStats(), CellStats()
+        b.add({"seconds": 0.002, "rows": 4})
+        a.merge(b)
+        assert a.timed == 1 and a.mean_s == pytest.approx(0.002)
+
+
+# -- fitting and prediction ------------------------------------------------
+
+def _linear_model(a=0.0005, b=0.0001, c=0.00002):
+    """Cells sampled exactly from seconds = a + b*rows + c*rows*width."""
+    m = StepCostModel(safety=1.0)
+    for rows in (1, 2, 4, 8):
+        for width in (1, 2, 4):
+            m.observe(("decode", rows, width),
+                      a + b * rows + c * rows * width, rows=rows)
+    return m
+
+
+class TestStepCostModel:
+    def test_fit_recovers_linear_surface(self):
+        m = _linear_model()
+        coeffs = m.fit()["decode"]
+        assert coeffs == pytest.approx([0.0005, 0.0001, 0.00002], rel=1e-6)
+        assert m.dispatch_overhead_s("decode") == pytest.approx(0.0005)
+
+    def test_predict_measured_cell_uses_mean(self):
+        m = StepCostModel()
+        m.observe(("decode", 4, 2), 0.010)
+        m.observe(("decode", 4, 2), 0.020)
+        assert m.predict("decode", 4, 2) == pytest.approx(0.015)
+
+    def test_predict_unseen_cell_interpolates(self):
+        m = _linear_model()
+        # (3, 3) was never observed: priced off the fitted surface
+        want = 0.0005 + 0.0001 * 3 + 0.00002 * 9
+        assert m.predict("decode", 3, 3) == pytest.approx(want, rel=1e-5)
+
+    def test_unmeasured_phase_prices_infinite(self):
+        m = _linear_model()
+        assert math.isinf(m.predict("prefill", 1, 8))
+        assert math.isinf(m.dispatch_overhead_s("prefill"))
+
+    def test_coefficients_never_negative(self):
+        m = StepCostModel()
+        # adversarial: cost DECREASES with width (noise) — the nnls clamp
+        # must zero the width term rather than fit a negative rate
+        m.observe(("decode", 1, 1), 0.004)
+        m.observe(("decode", 1, 2), 0.003)
+        m.observe(("decode", 1, 4), 0.002)
+        for coeff in m.fit()["decode"]:
+            assert coeff >= 0.0
+
+    def test_ingest_mapping_and_meta_stream(self):
+        stats = ServerStats()
+        for _ in range(3):
+            stats.record_meta({"kind": "decode", "rows": 2, "padded": 2,
+                               "width": 1, "seconds": 0.002})
+        m = StepCostModel()
+        assert m.ingest(stats.cell_stats) == 1
+        assert m.predict("decode", 2, 1) == pytest.approx(0.002)
+        m2 = StepCostModel()
+        n = m2.ingest([
+            {"kind": "prefill", "rows": 1, "padded": 1, "bucket": 8,
+             "seconds": 0.005},
+            {"kind": "decode", "rows": 1, "padded": 1, "width": 1},  # untimed
+        ])
+        assert n == 1
+        assert m2.predict("prefill", 1, 8) == pytest.approx(0.005)
+
+    def test_error_report_scores_surface(self):
+        m = _linear_model()
+        rep = m.error_report()
+        assert rep["n_cells"] == 12
+        assert rep["median_rel_err"] < 1e-6  # exact linear data
+        assert all(r["rel_err"] < 1e-5 for r in rep["cells"])
+        assert "decode" in rep["coeffs"]
+
+
+# -- admission recosting ---------------------------------------------------
+
+def _task(name="t", *, decode_ms=2.0, steps=3, T=50.0):
+    segs = tuple(GpuSegment(e=decode_ms * 0.9, m=decode_ms * 0.1)
+                 for _ in range(steps))
+    return Task(name=name, C=0.1, T=T, D=T, segments=segs, priority=1)
+
+
+class TestRecost:
+    def test_recost_scales_down_never_up(self):
+        m = StepCostModel(safety=1.0)
+        m.observe(("decode", 1, 1), 0.0005)  # 0.5 ms, declared 2 ms
+        t = _task()
+        out = m.recost(t, ("decode", 1, 1))
+        for seg in out.segments:
+            assert seg.total == pytest.approx(0.5)
+            assert seg.e / seg.total == pytest.approx(0.9)  # e/m ratio kept
+        # a cell measured ABOVE the declared cost must not inflate it
+        m.observe(("decode", 8, 8), 0.050)
+        out2 = m.recost(t, ("decode", 8, 8))
+        for seg in out2.segments:
+            assert seg.total == pytest.approx(2.0)
+
+    def test_recost_safety_margin_applied(self):
+        m = StepCostModel(safety=2.0)
+        m.observe(("decode", 1, 1), 0.0005)
+        out = m.recost(_task(), ("decode", 1, 1))
+        assert out.segments[0].total == pytest.approx(1.0)  # 2 * 0.5 ms
+
+    def test_recost_per_segment_cells_with_none(self):
+        m = StepCostModel(safety=1.0)
+        m.observe(("decode", 1, 1), 0.0005)
+        t = _task(steps=3)
+        out = m.recost(t, [("decode", 1, 1), None, ("decode", 1, 1)])
+        totals = [s.total for s in out.segments]
+        assert totals == pytest.approx([0.5, 2.0, 0.5])
+        with pytest.raises(ValueError):
+            m.recost(t, [("decode", 1, 1)])
+
+    def test_recost_unmeasured_phase_keeps_declared(self):
+        m = StepCostModel()
+        out = m.recost(_task(), ("decode", 1, 1))
+        assert [s.total for s in out.segments] == pytest.approx([2.0] * 3)
+
+
+# -- bucket auto-tuning ----------------------------------------------------
+
+class TestAutotune:
+    def test_bucket_up(self):
+        assert bucket_up(3, (1, 2, 4, 8)) == 4
+        assert bucket_up(4, (1, 2, 4, 8)) == 4
+        assert bucket_up(9, (1, 2, 4, 8)) == 8  # clamp to cover
+
+    def test_minimizes_padding_waste(self):
+        got = autotune_buckets([3, 5, 9, 17], (1, 2, 4, 8, 16, 32),
+                               max_buckets=3)
+        assert got == (8, 16, 32)
+
+    def test_cover_always_kept(self):
+        got = autotune_buckets([1, 1, 2], (1, 2, 4, 8, 16), max_buckets=2)
+        assert got[-1] == 16
+        assert 16 in autotune_buckets([1], (1, 16), max_buckets=1)
+
+    def test_value_above_cover_rejected(self):
+        with pytest.raises(ValueError):
+            autotune_buckets([33], (1, 2, 4, 8, 16, 32), max_buckets=2)
+
+    def test_cost_model_pricing_changes_choice(self):
+        # waste says bucket 8 is harmless for value 5; a pricing where 8
+        # is catastrophically expensive pushes 5 into its own bucket set
+        def price(bucket, value):
+            return 1000.0 if bucket == 8 else float(bucket - value)
+
+        waste = autotune_buckets([5, 5, 5], (1, 2, 4, 8, 16), max_buckets=2)
+        priced = autotune_buckets([5, 5, 5], (1, 2, 4, 8, 16),
+                                  max_buckets=2, cost_of=price)
+        assert waste == (8, 16)
+        assert priced == (16,) or priced[0] != 8
+
+    def test_empty_values_returns_cover(self):
+        assert autotune_buckets([], (1, 2, 4), max_buckets=2) == (4,)
+
+
+class TestTrafficModel:
+    def test_hot_cells_share_threshold(self):
+        t = TrafficModel({("decode", 1, 1): 90, ("decode", 8, 8): 10,
+                          ("prefill", 1, 16): 5})
+        assert t.hot_cells() == {("decode", 1, 1), ("decode", 8, 8),
+                                 ("prefill", 1, 16)}
+        hot = t.hot_cells(min_share=0.5)
+        assert ("decode", 1, 1) in hot
+        assert ("decode", 8, 8) not in hot
+        assert ("prefill", 1, 16) in hot  # 100% of its own phase
+
+    def test_from_stats(self):
+        c = CellStats()
+        c.add({"seconds": 0.001, "rows": 1})
+        t = TrafficModel.from_stats({("decode", 1, 1): c})
+        assert t.counts == {("decode", 1, 1): 1}
+
+
+# -- property: calibrated admission is a sound superset --------------------
+
+def _calibrated_model(tasks, *, factor=0.25):
+    """A model whose measured cell prices every task's decode segment at
+    ``factor`` of its declared cost — the shape of real calibration, where
+    declared WCETs are the full-width worst case and the measured bucket
+    is cheaper."""
+    m = StepCostModel(safety=1.0)
+    worst = max((seg.total for t in tasks for seg in t.segments),
+                default=1.0)
+    m.observe(("decode", 1, 1), worst * factor * 1e-3)
+    return m
+
+
+def _admits_all(tasks, *, cost_model=None, cell=None) -> bool:
+    ctl = AdmissionController(2, epsilon_ms=0.05, cost_model=cost_model)
+    return all(ctl.try_admit(t, cell=cell).admitted for t in tasks)
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_calibrated_admission_is_superset(seed):
+    """Every taskset the worst-case-declared admission accepts, calibrated
+    admission accepts too: recosting is min(declared, predicted), and
+    Eqs (1)-(6) are monotone in segment costs."""
+    rng = random.Random(seed)
+    params = GenParams(num_cores=2, num_tasks=(3, 8), epsilon_ms=0.05)
+    tasks = generate_taskset(params, rng)
+    model = _calibrated_model(tasks)
+    declared = _admits_all(tasks)
+    calibrated = _admits_all(tasks, cost_model=model, cell=("decode", 1, 1))
+    if declared:
+        assert calibrated, "calibrated admission rejected a declared-admissible set"
+
+
+def test_calibrated_admission_strictly_wins():
+    """At least one workload is rejected under declared worst-case costs
+    but admitted under calibrated per-bucket costs (the perf payoff)."""
+    # 6 streams, each declaring 8 ms/step x 4 steps every 40 ms: declared
+    # device demand alone is 4.8x the period — hopeless under Eqs (1)-(6)
+    tasks = [_task(f"s{i}", decode_ms=8.0, steps=4, T=40.0)
+             for i in range(6)]
+    model = StepCostModel(safety=1.0)
+    model.observe(("decode", 2, 2), 0.0004)  # measured: 0.4 ms per step
+    assert not _admits_all(tasks)
+    assert _admits_all(tasks, cost_model=model, cell=("decode", 2, 2))
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_calibrated_bounds_dominate_simulated_wcrt(seed):
+    """Soundness under calibration: run the per-server pool analysis AND
+    the batched simulator on the SAME calibrated costs — the analysis
+    bound must still dominate the simulated WCRT (calibration shrinks both
+    sides coherently; it never lets execution outrun the proof)."""
+    rng = random.Random(seed)
+    params = GenParams(num_cores=4, num_tasks=(4, 8), epsilon_ms=0.05)
+    tasks = generate_taskset(params, rng)
+    model = _calibrated_model(tasks, factor=0.3)
+    recosted = [model.recost(t, ("decode", 1, 1)) for t in tasks]
+    for orig, cal in zip(tasks, recosted):
+        assert cal.G <= orig.G + 1e-12  # never re-priced upward
+    system = allocate_pool(recosted, 2, 2, epsilon=params.epsilon_ms)
+    res = server_analysis.analyze_pool(system)
+    horizon = 3.0 * max(t.T for t in system.tasks)
+    sim = simulator.simulate(system, mode="server_batched",
+                             horizon_ms=horizon, batch_max=4)
+    for t in system.tasks:
+        bound = res.wcrt(t.name)
+        if not math.isinf(bound):
+            assert sim.wcrt(t.name) <= bound + 1e-3, (
+                f"{t.name}: simulated {sim.wcrt(t.name)} > calibrated "
+                f"bound {bound}")

@@ -138,6 +138,58 @@ ENTRY %main (x: f32[256]) -> f32[512] {
         assert cost.collective_bytes["all-gather"] > 0
 
 
+class TestPagedDecodeGatherShapes:
+    """Regression pin for the cost-model calibration path: the roofline
+    features the StepCostModel fits against come from pricing the paged-
+    decode KV gather, so the gather byte rule and the xla_cost_analysis
+    normalization must stay stable on exactly these shapes."""
+
+    def test_gather_bytes_rule_pinned(self):
+        """gather charges 2*out + indices: the block-table gather of a
+        (n=2, w=4) cell over (17, 8, 4) block pools."""
+        txt = """
+HloModule m
+
+ENTRY %main (pool: f32[17,8,4], tables: s32[2,4]) -> f32[2,4,8,4] {
+  %pool = f32[17,8,4]{2,1,0} parameter(0)
+  %tables = s32[2,4]{1,0} parameter(1)
+  ROOT %g = f32[2,4,8,4]{3,2,1,0} gather(%pool, %tables), offset_dims={2,3}, collapsed_slice_dims={0}, start_index_map={0}, index_vector_dim=2, slice_sizes={1,8,4}
+}
+"""
+        cost = hlo_cost.analyze_text(txt)
+        out_b = 2 * 4 * 8 * 4 * 4      # f32[2,4,8,4]
+        idx_b = 2 * 4 * 4              # s32[2,4]
+        assert cost.hbm_bytes == pytest.approx(2.0 * out_b + idx_b)
+        assert cost.flops == 0.0
+
+    def test_compiled_gather_is_memory_bound(self):
+        """End to end on a real trace: jit the block-pool gather at a
+        paged-decode cell shape; the walker must price it, the
+        xla_cost_analysis dict must normalize to a flat mapping, and the
+        roofline terms must call it memory-bound (zero-FLOP data movement
+        is the regime the rows*width cost-model feature covers)."""
+
+        def f(pool, tables):
+            return pool[tables]  # (n, w, bs, hd) block gather
+
+        pool = jax.ShapeDtypeStruct((33, 16, 8), jnp.float32)
+        tables = jax.ShapeDtypeStruct((4, 2), jnp.int32)
+        compiled = jax.jit(f).lower(pool, tables).compile()
+        xla = hlo_cost.xla_cost_analysis(compiled)
+        assert isinstance(xla, dict) and "bytes accessed" in xla
+        out_b = 4 * 2 * 16 * 8 * 4
+        assert xla["bytes accessed"] >= out_b
+        cost = hlo_cost.analyze_text(compiled.as_text())
+        assert cost.hbm_bytes >= 2.0 * out_b
+        terms = roofline.analyze(
+            {"flops": xla.get("flops", 0.0),
+             "bytes accessed": xla["bytes accessed"]},
+            compiled.as_text(), chips=1, model_flops=0.0)
+        assert terms.bottleneck == "memory"
+        assert terms.memory_ms > 0.0
+        assert terms.compute_ms == pytest.approx(0.0, abs=1e-9)
+
+
 class TestRooflineTerms:
     def test_bottleneck_and_fraction(self):
         cost = {"flops": 0.0, "bytes accessed": 0.0}

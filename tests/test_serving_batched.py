@@ -235,20 +235,97 @@ class TestPagedPoolServing:
             eng.close()
 
     def test_precompile_visits_all_shape_buckets(self, setup):
-        """precompile() must walk every (rows, width) pow2 bucket so no
-        decode step ever hits a cold trace mid-traffic."""
+        """precompile() must warm every (rows, width) pow2 cell so no
+        decode step ever hits a cold trace mid-traffic — each distinct
+        cell traced ONCE (the jitted step is shared across servers)."""
         cfg, params = setup
         eng = ServeEngine(cfg, params, max_seq=32, num_servers=2,
                           batching=True, max_batch=4, paged=True,
                           kv_block_size=8)
         try:
-            # rows in {1,2,4}, widths in {1,2,4} (nb_max=32/8), x2 servers
-            assert eng.precompile() == 9 * 2
+            # rows in {1,2,4} x widths in {1,2,4} (nb_max=32/8) = 9 cells
+            rep = eng.precompile()
+            assert rep.compiled == 9 and rep.skipped == 0
+            # second call: everything already warm -> all deduped away
+            rep2 = eng.precompile()
+            assert rep2.compiled == 0 and rep2.skipped == 9
             before = eng._decode_paged._cache_size()
             assert eng.admit(_spec("w", 1)).admitted
             res = eng.generate("w", np.array([[1, 2, 3]], np.int32), steps=4)
             assert len(res.tokens) == 4
             assert eng._decode_paged._cache_size() == before  # no cold trace
+        finally:
+            eng.close()
+
+    def test_precompile_covers_nonpow2_max_batch(self, setup):
+        """max_batch=6 makes the runtime clamp produce a SIX-row cell
+        (pow2ceil clamped to the cap); the old pow2-only precompile loop
+        missed it, leaving (6, w) traces cold.  The ladder must include the
+        cap and the report must count the extra row bucket."""
+        cfg, params = setup
+        eng = ServeEngine(cfg, params, max_seq=32, num_servers=1,
+                          batching=True, max_batch=6, paged=True,
+                          kv_block_size=8)
+        try:
+            assert eng._row_buckets == (1, 2, 4, 6)
+            rep = eng.precompile()
+            # rows {1,2,4,6} x widths {1,2,4} = 12 cells
+            assert rep.compiled == 12
+            assert (6, 1) in rep.decode_cells
+        finally:
+            eng.close()
+
+    def test_traffic_aware_precompile_bumps_cold_cells(self, setup):
+        """precompile(traffic=...) compiles only the predicted-hit cells
+        plus the largest-cell safe fallback; a cold cell at runtime bumps
+        UP to a warm cover instead of stalling on XLA compilation."""
+        cfg, params = setup
+        eng = ServeEngine(cfg, params, max_seq=32, num_servers=1,
+                          batching=True, max_batch=4, paged=True,
+                          kv_block_size=8)
+        try:
+            hot = {("decode", 2, 2)}
+            rep = eng.precompile(traffic=hot)
+            # the hot cell + the (4, 4) fallback
+            assert rep.compiled == 2
+            assert set(rep.decode_cells) == {(2, 2), (4, 4)}
+            assert rep.skipped == 9 - 2
+            before = eng._decode_paged._cache_size()
+            assert eng.admit(_spec("t", 1)).admitted
+            res = eng.generate("t", np.array([[1, 2, 3]], np.int32), steps=4)
+            assert len(res.tokens) == 4
+            # the 1-row/width-1 steps ran in the warm (2, 2) cell: no new
+            # trace was compiled mid-traffic
+            assert eng._decode_paged._cache_size() == before
+            decodes = [m for m in eng.pool.servers[0].stats.batch_meta
+                       if m["kind"] == "decode"]
+            assert decodes and all(
+                (m["padded"], m["width"]) == (2, 2) and not m["cold"]
+                for m in decodes)
+        finally:
+            eng.close()
+
+    def test_tune_buckets_minimizes_padding_waste(self, setup):
+        """Bucket auto-tuning: with max_buckets=2 and short prompts the
+        prefill ladder collapses to {tight cover, max_seq} and decode
+        widths to {tight cover, nb_max} — and the tuned engine still
+        generates correctly (the cover bucket always survives)."""
+        cfg, params = setup
+        eng = ServeEngine(cfg, params, max_seq=32, num_servers=1,
+                          batching=True, max_batch=4, paged=True,
+                          kv_block_size=8)
+        try:
+            pb, wb = eng.tune_buckets([3, 3, 4], steps_hint=3,
+                                      max_buckets=2)
+            assert pb == (4, 32)   # tight cover 4 + forced max_seq
+            assert wb == (1, 4)    # every need is 1 block + forced nb_max
+            rep = eng.precompile()
+            # rows {1,2,4} x tuned widths {1,4} = 6 decode cells
+            assert rep.compiled == 6
+            assert eng.admit(_spec("b", 1)).admitted
+            res = eng.generate("b", np.array([[1, 2, 3]], np.int32),
+                               steps=4)
+            assert len(res.tokens) == 4
         finally:
             eng.close()
 
