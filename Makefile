@@ -13,7 +13,7 @@
 PYTEST = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 PYRUN = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast bench-smoke bench-calibrate
+.PHONY: test test-fast test-chaos bench-smoke bench-calibrate
 
 test:
 	$(PYTEST)
@@ -21,9 +21,16 @@ test:
 test-fast:
 	$(PYTEST) -m "not slow"
 
+# deterministic fault-injection matrix (kill mid-decode / during prefill,
+# double failure, transient storm, stall, degraded-mode shedding): asserts
+# bit-identical recovered tokens and zero leaked blocks/slots
+test-chaos:
+	$(PYTEST) tests/test_chaos.py
+
 bench-smoke:
 	$(PYRUN) benchmarks/batching_throughput.py --paged-sweep --smoke
 	$(PYRUN) benchmarks/cost_model_calibrate.py --smoke
+	$(PYRUN) benchmarks/recovery_latency.py --smoke
 
 bench-calibrate:
 	$(PYRUN) benchmarks/cost_model_calibrate.py

@@ -15,16 +15,17 @@ the paper's WFD-with-server packing (§5.3).
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from . import server_analysis
 from .allocation import allocate, allocate_pool
-from .task_model import Task
+from .task_model import GpuSegment, Task
 from .taskset_gen import assign_rm_priorities
 
 __all__ = [
     "AdmissionController",
     "AdmissionDecision",
+    "DegradedReport",
     "PoolAdmissionController",
     "check_pool",
 ]
@@ -35,6 +36,27 @@ class AdmissionDecision:
     admitted: bool
     reason: str = ""
     response_times: dict[str, float] = field(default_factory=dict)
+
+
+@dataclass
+class DegradedReport:
+    """Outcome of degraded-mode admission after a device eviction.
+
+    ``moved`` maps each surviving displaced stream to its new device —
+    re-proven schedulable there WITH its recovery segment (the priced
+    re-prefill of the retained prefix) appended.  ``shed`` lists every
+    stream dropped to make the shrunk pool schedulable, in the order shed —
+    lowest-priority victims first (graceful degradation), a displaced
+    stream itself only when no lower-priority victim was left.
+    ``reasons`` keeps the last rejection message per displaced stream that
+    needed shedding; ``recovery_ms`` the priced recovery cost per moved
+    stream."""
+
+    device: int
+    moved: dict[str, int] = field(default_factory=dict)
+    shed: list[str] = field(default_factory=list)
+    reasons: dict[str, str] = field(default_factory=dict)
+    recovery_ms: dict[str, float] = field(default_factory=dict)
 
 
 class AdmissionController:
@@ -166,6 +188,7 @@ class PoolAdmissionController:
             for _ in range(num_devices)
         ]
         self.placement: dict[str, int] = {}
+        self.alive = [True] * num_devices
 
     @property
     def num_devices(self) -> int:
@@ -185,8 +208,9 @@ class PoolAdmissionController:
         if stream.name in self.placement:
             return (AdmissionDecision(
                 False, f"duplicate stream name {stream.name!r}"), -1)
-        order = sorted(range(self.num_devices), key=self.gpu_utilization)
-        last = AdmissionDecision(False, "no devices")
+        order = sorted((d for d in range(self.num_devices) if self.alive[d]),
+                       key=self.gpu_utilization)
+        last = AdmissionDecision(False, "no surviving devices")
         for d in order:
             decision = self.devices[d].try_admit(stream, cell=cell)
             if decision.admitted:
@@ -199,6 +223,62 @@ class PoolAdmissionController:
         d = self.placement.pop(name, None)
         if d is not None:
             self.devices[d].remove(name)
+
+    # -- degraded-mode admission (device failure) --------------------------
+    def evict_device(self, device: int, *, recovery_cost_ms=0.0,
+                     ) -> DegradedReport:
+        """Re-run admission for a shrunk pool after device ``device`` died.
+
+        Its streams are displaced and re-admitted on the survivors in
+        DECREASING priority order, each with a recovery segment appended —
+        one extra GPU request of ``recovery_cost_ms`` (a float, or a
+        ``Task -> float`` callable so the engine can price each stream's
+        re-prefill via the calibrated cost model).  The appended segment
+        also pays the server's per-request 2*eps handling share, so the
+        recovery delay enters Eqs (1)-(6) exactly like any other segment.
+
+        When a displaced stream fails admission everywhere, the globally
+        LOWEST-priority admitted stream (strictly below the displaced one)
+        is shed and the admission retried; only when no such victim
+        remains is the displaced stream itself shed.  Idempotent: evicting
+        an already-dead device reports nothing new."""
+        if not (0 <= device < self.num_devices):
+            raise ValueError(f"device {device} outside pool of "
+                             f"{self.num_devices}")
+        report = DegradedReport(device=device)
+        if not self.alive[device]:
+            return report
+        self.alive[device] = False
+        ctrl = self.devices[device]
+        displaced = sorted(ctrl.streams, key=lambda t: -t.priority)
+        ctrl.streams = []
+        for t in displaced:
+            self.placement.pop(t.name, None)
+        price = (recovery_cost_ms if callable(recovery_cost_ms)
+                 else (lambda _t, _rc=float(recovery_cost_ms): _rc))
+        for t in displaced:
+            rc = float(price(t))
+            report.recovery_ms[t.name] = rc
+            cand = (replace(t, segments=(*t.segments, GpuSegment(e=rc, m=0.0)))
+                    if rc > 0 else t)
+            while True:
+                decision, d = self.try_admit(cand)
+                if decision.admitted:
+                    report.moved[t.name] = d
+                    break
+                report.reasons[t.name] = decision.reason
+                victim = self._lowest_priority_admitted(below=t.priority)
+                if victim is None:
+                    report.shed.append(t.name)
+                    break
+                self.remove(victim.name)
+                report.shed.append(victim.name)
+        return report
+
+    def _lowest_priority_admitted(self, *, below: int) -> Task | None:
+        cands = [t for d in range(self.num_devices) if self.alive[d]
+                 for t in self.devices[d].streams if t.priority < below]
+        return min(cands, key=lambda t: t.priority) if cands else None
 
 
 class MultiPodAdmission(PoolAdmissionController):

@@ -50,6 +50,7 @@ import time
 from dataclasses import dataclass
 from typing import Any, Callable, Hashable
 
+from repro.core.faults import DeviceLostError
 from repro.core.server_runtime import AcceleratorServer, Request
 
 __all__ = ["BatchRequest", "BatchingServer"]
@@ -133,22 +134,29 @@ class BatchingServer(AcceleratorServer):
             self.stats.wakeup_latencies.append(start - r.submit_t)
         results: list[Any] = []
         error: BaseException | None = None
+        payloads = [r.payload for r in batch]
         try:
-            results = head.run_batch([r.payload for r in batch])
+            results = self._attempt(lambda: head.run_batch(payloads))
             if len(results) != len(batch):
                 raise RuntimeError(
                     f"run_batch returned {len(results)} results for a batch "
                     f"of {len(batch)}")
+        except DeviceLostError as e:
+            self.fail(e)  # fails the whole batch (it is in-flight)
+            return
         except BaseException as e:  # noqa: BLE001 - surfaced to every client
             error = e
-        t0 = time.monotonic()
-        for i, r in enumerate(batch):
-            if error is not None:
-                r.error = error
-            else:
-                r.result = results[i]
-            r.end_t = t0
-            r._done.set()
+        with self._lock:
+            t0 = time.monotonic()
+            for i, r in enumerate(batch):
+                if r.done:
+                    continue  # a concurrent fail() already woke this client
+                if error is not None:
+                    r.error = error
+                else:
+                    r.result = results[i]
+                r.end_t = t0
+                r._done.set()
         self.stats.notify_latencies.append(time.monotonic() - t0)
         self.stats.completed += len(batch)
         self.stats.batches += 1

@@ -17,6 +17,17 @@ high-priority streams spread out instead of queueing behind each other),
 then by index.  The caller may also pin a stream to an explicit server —
 the serving engine does this to follow the admission controller's
 device-assignment step (``allocation.allocate_pool``).
+
+Fault tolerance: a server can die mid-traffic (its device call raises
+``DeviceLostError``, exhausts transient retries, or stalls past the
+heartbeat timeout).  ``evict_server(si)`` is the single choke point — it
+marks the server dead for routing, fails it (waking every suspended
+client with ``ServerFailedError``), and displaces its streams: either
+re-routed worst-fit onto survivors or handed back to the caller so
+degraded-mode admission can place (or shed) them.
+``enable_failure_detection`` wires a ``HeartbeatMonitor``: each server
+thread beats between device calls, so a call outlasting the timeout is a
+stall and the monitor thread evicts the server from outside.
 """
 
 from __future__ import annotations
@@ -60,6 +71,8 @@ class ServerPool:
             ]
         self._assign_lock = threading.Lock()
         self._streams: dict[str, StreamAssignment] = {}
+        self._alive = [True] * num_servers
+        self._monitor = None  # HeartbeatMonitor when detection is enabled
 
     # -- routing (partitioned, priority-aware worst-fit) -------------------
     def _route(self, utilization: float, priority: int) -> int:
@@ -70,7 +83,10 @@ class ServerPool:
                      if a.server == i and a.priority >= priority)
             return (util, hp, i)
 
-        return min(range(len(self.servers)), key=load)
+        candidates = [i for i in range(len(self.servers)) if self._alive[i]]
+        if not candidates:
+            raise RuntimeError("no surviving servers in the pool")
+        return min(candidates, key=load)
 
     def assign(self, stream: str, *, utilization: float = 0.0,
                priority: int = 0, server: int | None = None) -> int:
@@ -85,6 +101,8 @@ class ServerPool:
             elif not (0 <= server < len(self.servers)):
                 raise ValueError(f"server {server} outside pool of "
                                  f"{len(self.servers)}")
+            elif not self._alive[server]:
+                raise ValueError(f"server {server} has failed")
             self._streams[stream] = StreamAssignment(server, utilization, priority)
             return server
 
@@ -97,6 +115,110 @@ class ServerPool:
 
     def server_for(self, stream: str) -> AcceleratorServer:
         return self.servers[self._streams[stream].server]
+
+    # -- fault tolerance ---------------------------------------------------
+    def alive_servers(self) -> list[int]:
+        return [i for i in range(len(self.servers)) if self._alive[i]]
+
+    def evict_server(self, si: int, *, cause: BaseException | None = None,
+                     reroute: bool = True) -> dict[str, int | None] | None:
+        """Declare server ``si`` dead and displace its streams.
+
+        Idempotent and safe to call from any thread — the heartbeat monitor
+        calls it on stall, the server's own thread on fatal device error,
+        the engine's recovery path when a client wakes with
+        ``ServerFailedError``; whichever races first wins and the rest see
+        ``None`` (already evicted — nothing displaced by *this* call).  The
+        server is failed (all its suspended clients wake), and every stream
+        assigned to it is displaced in decreasing priority: with
+        ``reroute=True`` each is re-bound worst-fit among survivors
+        (returned as ``{stream: new_server}``); with ``reroute=False`` the
+        bindings are dropped and returned as ``{stream: None}`` so the
+        caller (degraded-mode admission) decides placement — or shedding —
+        itself.
+        """
+        if not (0 <= si < len(self.servers)):
+            raise ValueError(f"server {si} outside pool of {len(self.servers)}")
+        with self._assign_lock:
+            if not self._alive[si]:
+                return None
+            self._alive[si] = False
+            displaced = sorted(
+                (name for name, a in self._streams.items() if a.server == si),
+                key=lambda n: -self._streams[n].priority)
+            if not any(self._alive):
+                reroute = False  # nowhere left to put them
+            moved: dict[str, int | None] = {}
+            for name in displaced:
+                a = self._streams.pop(name)
+                if reroute:
+                    new = self._route(a.utilization, a.priority)
+                    self._streams[name] = StreamAssignment(
+                        new, a.utilization, a.priority)
+                    moved[name] = new
+                else:
+                    moved[name] = None
+        if self._monitor is not None:
+            self._monitor.unregister(self.servers[si].name)
+        self.servers[si].fail(cause)  # reentrant-safe: _alive already False
+        return moved
+
+    def reassign(self, stream: str, server: int, *, utilization: float = 0.0,
+                 priority: int = 0) -> None:
+        """Re-bind a (possibly displaced) stream to an explicit live server
+        — the degraded-admission path after ``evict_server(reroute=False)``."""
+        with self._assign_lock:
+            if not (0 <= server < len(self.servers)) or not self._alive[server]:
+                raise ValueError(f"server {server} is not alive")
+            self._streams[stream] = StreamAssignment(
+                server, utilization, priority)
+
+    def enable_failure_detection(
+        self, *, timeout: float = 1.0, poll: float = 0.05,
+        on_death: Callable[[int, dict], None] | None = None,
+    ) -> "Any":
+        """Wire a ``HeartbeatMonitor`` across the pool: every server thread
+        beats between device calls (and each ``poll``-ish interval while
+        idle), so a single device call outlasting ``timeout`` is a stall
+        and the monitor thread evicts that server from outside — the
+        per-device-call timeout.  Detection covers every death path: stall
+        (monitor thread) and fatal device error / retry exhaustion (the
+        server's own thread, via ``fail`` -> ``on_failure``).
+
+        With ``on_death`` set, eviction uses ``reroute=False`` and
+        ``on_death(si, displaced)`` receives the dropped bindings — the
+        serving engine hangs degraded-mode admission here.  Whichever path
+        evicts first is the only one that fires ``on_death``.  Returns the
+        monitor (owned by the pool; ``shutdown`` closes it)."""
+        from repro.runtime.fault_tolerance import HeartbeatMonitor
+
+        index_of = {s.name: i for i, s in enumerate(self.servers)}
+        reroute = on_death is None
+
+        def _report(si: int, cause: BaseException) -> None:
+            displaced = self.evict_server(si, cause=cause, reroute=reroute)
+            if displaced is not None and on_death is not None:
+                on_death(si, displaced)
+
+        def _stalled(worker: str) -> None:
+            _report(index_of[worker], TimeoutError(
+                f"no heartbeat from {worker!r} for {timeout}s"))
+
+        monitor = HeartbeatMonitor(timeout=timeout, poll=poll,
+                                   on_failure=_stalled)
+        self._monitor = monitor
+        for i, s in enumerate(self.servers):
+            monitor.register(s.name)
+            s.beat = (lambda name=s.name: monitor.beat(name))
+            s.beat_interval_s = min(s.beat_interval_s, max(poll, 1e-3))
+            s.on_failure = (lambda server, si=i:
+                            _report(si, server.fail_cause))
+        return monitor
+
+    def attach_fault_injector(self, injector: "Any") -> None:
+        """Install a ``runtime.faultinject.FaultInjector``'s per-server
+        hooks into every server's device-call path."""
+        injector.attach(self)
 
     # -- dispatch ----------------------------------------------------------
     def submit(self, stream: str, fn: Callable[[], Any], *, priority: int = 0,
@@ -136,6 +258,16 @@ class ServerPool:
 
     # -- lifecycle ---------------------------------------------------------
     def shutdown(self, *, drain: bool = True, timeout: float = 30.0) -> None:
+        """Close the pool.  The monitor goes down FIRST — servers stop
+        beating the moment they are told to stop, and a monitor left
+        running would race eviction callbacks into a half-torn-down pool.
+        With ``drain=True`` every server then finishes its queued and
+        in-flight work before joining; with ``drain=False`` pending
+        requests are failed (clients wake) and only in-flight work runs
+        out."""
+        if self._monitor is not None:
+            self._monitor.close()
+            self._monitor = None
         for s in self.servers:
             s.shutdown(drain=drain, timeout=timeout)
 

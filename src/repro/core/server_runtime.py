@@ -20,6 +20,18 @@ Beyond-paper extensions (used by serving; each is off by default):
     mitigation in serving.
   * per-request timing stats, so epsilon can be *measured* (overheads
     benchmark mirrors the paper's §6.2).
+  * fault tolerance: every device call runs through :meth:`_attempt`, which
+    retries ``core.faults.TransientDeviceError`` with bounded exponential
+    backoff and escalates to a server-wide failure on
+    ``core.faults.DeviceLostError`` (or retry exhaustion).  A failed server
+    wakes every suspended client with ``ServerFailedError`` — queued AND
+    in-flight — so the serving engine can recover streams onto survivors.
+    ``fail()`` is also callable from OUTSIDE the server thread: that is how
+    the heartbeat monitor kills a server stuck in a stalled device call
+    (the per-device-call timeout — the server beats between calls, so a
+    call outlasting the heartbeat timeout is declared a stall).  An
+    optional ``runtime.straggler.StepTimeWatchdog`` observes every call's
+    duration for slow-step (degraded-health) flagging.
 """
 
 from __future__ import annotations
@@ -33,6 +45,8 @@ from dataclasses import dataclass, field
 from typing import Any, Callable
 
 from repro.core.dispatch.policy import ORDERINGS, request_key
+from repro.core.faults import (DeviceLostError, ServerFailedError,
+                               TransientDeviceError)
 
 __all__ = ["AcceleratorServer", "CellStats", "Request", "ServerStats",
            "cell_key", "BATCH_META_CAP"]
@@ -184,11 +198,23 @@ class AcceleratorServer:
         if ordering not in ORDERINGS:
             raise ValueError(ordering)
         self.ordering = ordering
+        self.name = name
         self._lock = threading.Condition()
         self._queue: list[tuple[Any, int, Request]] = []
         self._seq = 0
         self._stop = False
         self.stats = ServerStats()
+        # -- fault tolerance (all optional; defaults preserve old behavior) --
+        self.fault_hook: Callable[[], None] | None = None  # injection point
+        self.max_retries = 2  # transient-error retries before escalation
+        self.retry_backoff_s = 0.005  # base of the exponential backoff
+        self.on_failure: Callable[["AcceleratorServer"], None] | None = None
+        self.beat: Callable[[], None] | None = None  # heartbeat tick
+        self.beat_interval_s = 0.05
+        self.watchdog = None  # runtime.straggler.StepTimeWatchdog, if any
+        self.failed = False
+        self.fail_cause: BaseException | None = None
+        self._inflight: list[Request] | None = None
         self._thread = threading.Thread(target=self._serve, name=name, daemon=True)
         self._thread.start()
 
@@ -197,6 +223,10 @@ class AcceleratorServer:
         """Stamp, queue, and wake the server (shared by all submit paths)."""
         req.submit_t = time.monotonic()
         with self._lock:
+            if self.failed:
+                raise ServerFailedError(
+                    f"server {self.name!r} failed: {self.fail_cause}",
+                    server=self.name)
             if self._stop:
                 raise RuntimeError("server stopped")
             self._seq += 1
@@ -223,10 +253,57 @@ class AcceleratorServer:
     def shutdown(self, *, drain: bool = True, timeout: float = 30.0) -> None:
         with self._lock:
             if not drain:
+                # Wake abandoned clients instead of leaving them suspended
+                # forever on a queue that will never be served.
+                for _, _, req in self._queue:
+                    if not req.done:
+                        req.error = ServerFailedError(
+                            f"server {self.name!r} shut down before serving "
+                            f"request {req.name!r}", server=self.name)
+                        req.end_t = time.monotonic()
+                        req._done.set()
                 self._queue.clear()
             self._stop = True
-            self._lock.notify()
+            self._lock.notify_all()
         self._thread.join(timeout)
+
+    def fail(self, cause: BaseException | None = None) -> None:
+        """Declare this server dead (callable from ANY thread).
+
+        Every queued AND in-flight request completes with
+        :class:`ServerFailedError`, waking suspended clients so they can run
+        stream recovery; later submissions are rejected with the same error.
+        Idempotent — only the first call has effect.  ``on_failure`` fires
+        once, outside the lock (it may call back into the pool).
+
+        The heartbeat monitor calls this from its own thread when the server
+        misses beats (a device call stalled past the timeout); the server
+        thread calls it on :class:`DeviceLostError`.  If the stalled call
+        ever returns, its result is discarded — the request already
+        completed with the failure error (``req.done`` guard).
+        """
+        with self._lock:
+            if self.failed:
+                return
+            self.failed = True
+            self.fail_cause = cause
+            victims = [req for _, _, req in self._queue]
+            self._queue.clear()
+            if self._inflight is not None:
+                victims.extend(self._inflight)
+            now = time.monotonic()
+            for req in victims:
+                if not req.done:
+                    req.error = ServerFailedError(
+                        f"server {self.name!r} failed: {cause}",
+                        server=self.name)
+                    req.end_t = now
+                    req._done.set()
+            self._stop = True
+            self._lock.notify_all()
+        cb = self.on_failure
+        if cb is not None:
+            cb(self)
 
     def __enter__(self) -> "AcceleratorServer":
         return self
@@ -246,27 +323,80 @@ class AcceleratorServer:
         _, _, req = heapq.heappop(self._queue)
         return [req]
 
+    def _attempt(self, fn: Callable[[], Any]) -> Any:
+        """Run one device call with fault injection, bounded transient
+        retry, and watchdog observation (server thread only).
+
+        :class:`TransientDeviceError` is retried up to ``max_retries`` times
+        with exponential backoff; exhaustion escalates to
+        :class:`DeviceLostError` (the caller declares the server dead).
+        """
+        attempts = 0
+        while True:
+            try:
+                t0 = time.monotonic()
+                if self.fault_hook is not None:
+                    self.fault_hook()
+                result = fn()
+                if self.watchdog is not None:
+                    self.watchdog.observe(time.monotonic() - t0)
+                return result
+            except TransientDeviceError as e:
+                attempts += 1
+                if attempts > self.max_retries:
+                    raise DeviceLostError(
+                        f"transient retries exhausted after {self.max_retries}"
+                        f" retries: {e}") from e
+                time.sleep(self.retry_backoff_s * (2 ** (attempts - 1)))
+
+    def _complete(self, req: Request, result: Any,
+                  error: BaseException | None) -> None:
+        """Finish one request, unless a concurrent ``fail()`` beat us to it
+        (then the client already woke with ServerFailedError and this — e.g.
+        a stalled call's eventual return — is discarded)."""
+        with self._lock:
+            if req.done:
+                return
+            req.result = result
+            req.error = error
+            t0 = time.monotonic()
+            req.end_t = t0
+            req._done.set()  # wake the client (it was suspended, not polling)
+        self.stats.notify_latencies.append(time.monotonic() - t0)
+        self.stats.completed += 1
+
     def _execute(self, batch: list[Request]) -> None:
         """Run one dispatch unit on the accelerator (server thread only)."""
         req = batch[0]
         req.start_t = time.monotonic()
         self.stats.wakeup_latencies.append(req.start_t - req.submit_t)
         try:
-            req.result = req.fn()  # non-preemptive accelerator execution
+            result = self._attempt(req.fn)  # non-preemptive accelerator run
+            error: BaseException | None = None
+        except DeviceLostError as e:
+            self.fail(e)
+            return
         except BaseException as e:  # noqa: BLE001 - surfaced to the client
-            req.error = e
-        t0 = time.monotonic()
-        req.end_t = t0
-        req._done.set()  # wake the client (it was suspended, not polling)
-        self.stats.notify_latencies.append(time.monotonic() - t0)
-        self.stats.completed += 1
+            result, error = None, e
+        self._complete(req, result, error)
 
     def _serve(self) -> None:
         while True:
             with self._lock:
                 while not self._queue and not self._stop:
-                    self._lock.wait()  # server suspends when idle
+                    if self.beat is not None:
+                        self.beat()
+                        self._lock.wait(self.beat_interval_s)
+                    else:
+                        self._lock.wait()  # server suspends when idle
                 if not self._queue and self._stop:
                     return
                 batch = self._dequeue_locked()
+                self._inflight = batch
+            if self.beat is not None:
+                self.beat()  # last beat before a (possibly stalling) call
             self._execute(batch)
+            with self._lock:
+                self._inflight = None
+                if self.failed:
+                    return

@@ -45,6 +45,7 @@ import math
 from dataclasses import dataclass, field
 
 from .dispatch.policy import request_key
+from .faults import DeviceFault
 from .task_model import System, Task
 
 __all__ = ["simulate", "SimResult", "TraceSlice"]
@@ -244,22 +245,48 @@ class _GpuServer:
         self.thread = _Thread(name, core, _SERVER_PRIO)
         self.work: list[tuple[int, int, object]] = []  # (class, seq, (dur, then))
         self.cpu_busy = False
+        self.dead = False  # device died (fault injection): nothing completes
+        self.inflight: list | None = None  # requests inside the current call
+
+    # -- fault injection ---------------------------------------------------
+    def kill(self) -> None:
+        """The device dies mid-work: the in-flight call never completes, the
+        queue freezes, and every continuation below turns into a no-op.  The
+        orphaned requests stay parked until ``drain_orphans`` (the detection
+        instant) hands them to the failover target."""
+        self.dead = True
+
+    def drain_orphans(self) -> list:
+        """All parked requests — in-flight first (they waited longest), then
+        the frozen queue in policy order — as (prio, seg_e, seg_m, cb)."""
+        orphans = list(self.inflight or [])
+        self.inflight = None
+        for item in sorted(self.queue):
+            _, _, req = item
+            orphans.append(req)
+        self.queue = []
+        return orphans
 
     # -- serialized server CPU --------------------------------------------
     def _cpu(self, dur: int, then, *, segment_work: bool) -> None:
+        if self.dead:
+            return
         self.seq += 1
         heapq.heappush(self.work, (0 if segment_work else 1, self.seq, (dur, then)))
         if not self.cpu_busy:
             self._next_work()
 
     def _next_work(self) -> None:
-        if not self.work:
+        if self.dead or not self.work:
             self.cpu_busy = False
             return
         self.cpu_busy = True
         _, _, (dur, then) = heapq.heappop(self.work)
 
         def done():
+            if self.dead:
+                self.cpu_busy = False
+                return
             then()
             self._next_work()
 
@@ -272,7 +299,10 @@ class _GpuServer:
     def submit(self, prio: int, seg_e: int, seg_m: int, on_complete) -> None:
         self.seq += 1
         key = request_key(self.ordering, priority=prio)
-        heapq.heappush(self.queue, (key, self.seq, (seg_e, seg_m, on_complete)))
+        heapq.heappush(self.queue,
+                       (key, self.seq, (prio, seg_e, seg_m, on_complete)))
+        if self.dead:
+            return  # parked: recovered at the detection instant
         if self.batch_max > 1:
             # coalesced receive: one eps drains every arrival since the
             # server last checked its mailbox
@@ -291,44 +321,56 @@ class _GpuServer:
 
     def _pop_batch(self) -> tuple[int, int, list]:
         """Pop the head request plus every same-shape request (identical
-        (G^e, G^m)) up to batch_max; returns (seg_e, seg_m, callbacks)."""
-        _, _, (seg_e, seg_m, on_complete) = heapq.heappop(self.queue)
-        callbacks = [on_complete]
+        (G^e, G^m)) up to batch_max; returns (seg_e, seg_m, batch) with
+        batch entries (prio, seg_e, seg_m, on_complete)."""
+        _, _, (prio, seg_e, seg_m, on_complete) = heapq.heappop(self.queue)
+        batch = [(prio, seg_e, seg_m, on_complete)]
         if self.batch_max > 1 and self.queue:
             keep = []
             for item in sorted(self.queue):  # queue-policy order
-                _, _, (e2, m2, cb2) = item
-                if (len(callbacks) < self.batch_max and e2 == seg_e
+                _, _, (p2, e2, m2, cb2) = item
+                if (len(batch) < self.batch_max and e2 == seg_e
                         and m2 == seg_m):
-                    callbacks.append(cb2)
+                    batch.append((p2, e2, m2, cb2))
                 else:
                     keep.append(item)
             self.queue = keep
             heapq.heapify(self.queue)
-        return seg_e, seg_m, callbacks
+        return seg_e, seg_m, batch
 
     def _maybe_start(self) -> None:
-        if self.gpu_busy or self.notify_pending or not self.queue:
+        if self.dead or self.gpu_busy or self.notify_pending or not self.queue:
             return
         self.gpu_busy = True
-        seg_e, seg_m, callbacks = self._pop_batch()
+        seg_e, seg_m, batch = self._pop_batch()
+        self.inflight = batch
+        callbacks = [cb for _, _, _, cb in batch]
         m1 = seg_m // 2
         m2 = seg_m - m1
 
         def after_m1():
+            if self.dead:
+                return
             # pure-GPU span: server suspends (no CPU demand)
             self.eng.post(self.eng.now + seg_e, after_e)
 
         def after_e():
+            if self.dead:
+                return
             self._cpu(m2, after_m2, segment_work=True)
 
         def after_m2():
+            if self.dead:
+                return
             # completion: eps of server CPU (notify client(s) + dequeue next)
             self.gpu_busy = False
             self.notify_pending = True
             self._cpu(self.eps, complete, segment_work=True)
 
         def complete():
+            if self.dead:
+                return
+            self.inflight = None
             self.notify_pending = False
             for cb in callbacks:
                 cb()
@@ -422,6 +464,7 @@ class _Sim:
         splits: dict[str, list[float]] | None,
         offsets: dict[str, float] | None,
         batch_max: int = 1,
+        faults: list[DeviceFault] | None = None,
     ):
         self.system = system
         self.mode = mode
@@ -430,6 +473,15 @@ class _Sim:
         self.splits = splits or {}
         self.offsets = offsets or {}
         self.horizon = _ns(horizon_ms)
+        self.faults = sorted(faults or [], key=lambda f: f.at_ms)
+        if self.faults and mode not in ("server", "server_fifo",
+                                        "server_batched"):
+            raise ValueError("fault injection requires a server mode")
+        self.device_map = list(range(max(system.num_gpus, 1)))
+        for f in self.faults:
+            if not (0 <= f.device < len(self.device_map)
+                    and 0 <= f.to < len(self.device_map)):
+                raise ValueError(f"fault device outside pool: {f}")
         if mode in ("server", "server_fifo", "server_batched"):
             cores = system.server_cores
             if not cores:
@@ -450,11 +502,31 @@ class _Sim:
         else:
             raise ValueError(mode)
 
+    def _route(self, device: int) -> int:
+        """Resolve failovers transitively (a double failure chains maps)."""
+        d = device
+        while self.device_map[d] != d:
+            d = self.device_map[d]
+        return d
+
+    def _recover(self, f: DeviceFault) -> None:
+        """Detection instant of fault ``f``: re-route the dead device's
+        traffic and re-submit its orphaned requests to the failover target
+        with the recovery (re-prefill) cost FOLDED into each segment — one
+        re-issued request, not an extra one.  That is deliberately weaker
+        than the analysis (which appends a whole extra segment, paying its
+        own 2*eps server handling), keeping bound >= sim."""
+        self.device_map[f.device] = f.to
+        target = self.servers[self._route(f.to)]
+        rec_e, rec_m = _ns(f.recovery.e), _ns(f.recovery.m)
+        for prio, e, m, cb in self.servers[f.device].drain_orphans():
+            target.submit(prio, e + rec_e, m + rec_m, cb)
+
     def gpu_access(self, job: _Job, seg) -> None:
         e_ns, m_ns = _ns(seg.e), _ns(seg.m)
         if self.mode == "server":
             # client suspends; its device's server handles the segment
-            server = self.servers[job.task.device]
+            server = self.servers[self._route(job.task.device)]
             server.submit(job.task.priority, e_ns, m_ns, job.gpu_done)
         else:
             th = job.thread
@@ -475,6 +547,11 @@ class _Sim:
                 granted()
 
     def run(self) -> SimResult:
+        for f in self.faults:
+            self.eng.post(_ns(f.at_ms),
+                          lambda f=f: self.servers[f.device].kill())
+            self.eng.post(_ns(f.at_ms + f.detect_ms),
+                          lambda f=f: self._recover(f))
         for task in self.system.tasks:
             off = _ns(self.offsets.get(task.name, 0.0))
             t = off
@@ -496,6 +573,7 @@ def simulate(
     splits: dict[str, list[float]] | None = None,
     offsets: dict[str, float] | None = None,
     batch_max: int = 4,
+    faults: list[DeviceFault] | None = None,
 ) -> SimResult:
     """Simulate ``system`` for ``horizon_ms`` under ``mode`` in
     {'server','server_fifo','server_batched','mpcp','fmlp'}.  Jobs are
@@ -504,6 +582,13 @@ def simulate(
     split (list of ms, length eta+1) per task name.  ``batch_max`` caps the
     coalesced batch size in 'server_batched' mode (ignored otherwise).
     Multi-accelerator systems (``System.server_cores``) run one server (or
-    mutex) per device, routed by each task's ``device``."""
+    mutex) per device, routed by each task's ``device``.
+
+    ``faults`` (server modes only) injects ``core.faults.DeviceFault``
+    device deaths: at ``at_ms`` the device stops mid-work; at
+    ``at_ms + detect_ms`` its orphaned requests re-submit to device ``to``
+    with the recovery cost folded in, and its tasks re-route there for the
+    rest of the run.  ``server_analysis.analyze_pool_under_faults`` prices
+    the same schedule analytically; bound >= sim is property-tested."""
     return _Sim(system, mode, horizon_ms, trace, splits, offsets,
-                batch_max=batch_max).run()
+                batch_max=batch_max, faults=faults).run()

@@ -81,7 +81,13 @@ class WorkerState:
 class HeartbeatMonitor:
     """Failure detector: workers call ``beat(name)``; a monitor thread marks
     a worker dead after ``timeout`` seconds of silence and fires
-    ``on_failure(name)`` exactly once per transition."""
+    ``on_failure(name)`` exactly once per transition.
+
+    Usable as a context manager; after ``close()`` returns, ``on_failure``
+    is guaranteed not to fire again — callbacks run under a dedicated lock
+    that ``close()`` takes before setting the stop flag, so a close racing
+    the monitor thread either waits out the in-flight callback or suppresses
+    the pending one (the old code could fire into torn-down owners)."""
 
     def __init__(self, *, timeout: float = 1.0, poll: float = 0.1,
                  on_failure: Callable[[str], None] | None = None):
@@ -90,6 +96,7 @@ class HeartbeatMonitor:
         self.on_failure = on_failure
         self.workers: dict[str, WorkerState] = {}
         self._lock = threading.Lock()
+        self._cb_lock = threading.Lock()
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._run, daemon=True)
         self._thread.start()
@@ -97,6 +104,12 @@ class HeartbeatMonitor:
     def register(self, name: str) -> None:
         with self._lock:
             self.workers[name] = WorkerState(name, time.monotonic())
+
+    def unregister(self, name: str) -> None:
+        """Stop watching ``name`` (e.g. a server already declared dead by
+        another path — no point re-reporting it)."""
+        with self._lock:
+            self.workers.pop(name, None)
 
     def beat(self, name: str) -> None:
         with self._lock:
@@ -119,12 +132,23 @@ class HeartbeatMonitor:
                         w.alive = False
                         dead.append(w.name)
             for name in dead:
-                if self.on_failure:
-                    self.on_failure(name)
+                with self._cb_lock:
+                    if self._stop.is_set():
+                        return  # closed mid-scan: suppress late callbacks
+                    if self.on_failure:
+                        self.on_failure(name)
 
     def close(self) -> None:
-        self._stop.set()
+        """Idempotent; once it returns, no further ``on_failure`` fires."""
+        with self._cb_lock:
+            self._stop.set()
         self._thread.join(timeout=2)
+
+    def __enter__(self) -> "HeartbeatMonitor":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
 
 
 class TrainSupervisor:

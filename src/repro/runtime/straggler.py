@@ -26,11 +26,14 @@ from dataclasses import dataclass, field
 
 
 class StepTimeWatchdog:
-    def __init__(self, *, window: int = 50, factor: float = 3.0, min_samples: int = 5):
+    def __init__(self, *, window: int = 50, factor: float = 3.0,
+                 min_samples: int = 5, escalate_after: int = 3):
         self.times: deque[float] = deque(maxlen=window)
         self.factor = factor
         self.min_samples = min_samples
+        self.escalate_after = escalate_after
         self.flagged: list[tuple[int, float]] = []
+        self.consecutive = 0  # straggler steps in a row (degraded health)
         self._step = 0
 
     def observe(self, duration_s: float) -> bool:
@@ -42,8 +45,16 @@ class StepTimeWatchdog:
             if duration_s > self.factor * p50:
                 self.flagged.append((self._step, duration_s))
                 is_straggler = True
+        self.consecutive = self.consecutive + 1 if is_straggler else 0
         self.times.append(duration_s)
         return is_straggler
+
+    @property
+    def degraded(self) -> bool:
+        """True once ``escalate_after`` consecutive steps ran slow — the
+        owner should treat the device as unhealthy (serving wires this next
+        to the heartbeat stall path as a softer escalation signal)."""
+        return self.consecutive >= self.escalate_after
 
 
 @dataclass

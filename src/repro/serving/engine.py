@@ -64,9 +64,10 @@ import numpy as np
 from repro.analysis.cost_model import autotune_buckets, bucket_up
 from repro.core.admission import PoolAdmissionController
 from repro.core.dispatch.pool import ServerPool
+from repro.core.faults import ServerFailedError, StreamShedError
 from repro.core.task_model import GpuSegment, Task
 from repro.models import model as M
-from repro.runtime.straggler import DeadlineAwarePolicy
+from repro.runtime.straggler import DeadlineAwarePolicy, StepTimeWatchdog
 from repro.serving.kvcache import PagedKVCacheManager
 
 
@@ -121,6 +122,37 @@ class GenerationResult:
     tokens: list[int] = field(default_factory=list)
     prefill_latency_s: float = 0.0
     decode_latencies_s: list[float] = field(default_factory=list)
+    recoveries: int = 0  # server deaths this job survived
+    # monotonic timestamp per recovery at which the retained prefix was
+    # re-established on a survivor (resume point, for latency measurement)
+    resumed_at_monotonic: list[float] = field(default_factory=list)
+
+
+@dataclass
+class _RecoveryLog:
+    """Per-stream-job recovery state: the RETAINED TOKEN PREFIX.
+
+    The first attempt's prefill argmax (``first_token``) is fed to decode
+    step 0 but never appended to the result; every decode argmax is
+    appended to both the result and ``generated``.  The retained prefix —
+    prompt ++ [first_token] ++ generated — is therefore exactly the token
+    sequence whose KV the dead server held, so re-prefilling it on a
+    survivor puts the cache in the same state the failed decode step saw,
+    and its LAST-position argmax equals the token that step would have
+    produced: greedy recovered output is bit-identical by construction."""
+
+    prompt: np.ndarray
+    first_token: int | None = None
+    generated: list[int] = field(default_factory=list)
+
+    def retained_prefix(self) -> np.ndarray:
+        if self.first_token is None:
+            return self.prompt
+        return np.concatenate([
+            self.prompt,
+            np.asarray([self.first_token], np.int32),
+            np.asarray(self.generated, np.int32),
+        ])
 
 
 class _SlotState:
@@ -202,6 +234,13 @@ class ServeEngine:
                    if kv_blocks and not self.paged else None)
         self._kv_lock = threading.Lock()
         self._seq_counter = 0
+        # fault-tolerance state (see enable_fault_tolerance): recovery is
+        # serialized — concurrent failure observers queue on the lock and
+        # find the server already handled
+        self._recovery_lock = threading.Lock()
+        self._shed: set[str] = set()
+        self._held: dict[str, set] = {}  # stream -> {(si | None, seq_id)}
+        self.degraded_reports: list = []
         # max_seq must be static inside the trace (it sizes the cache pad)
         self._prefill = jax.jit(
             lambda p, b: M.apply(cfg, p, {**b, "max_seq": max_seq},
@@ -271,9 +310,24 @@ class ServeEngine:
         return decision
 
     def remove(self, name: str) -> None:
+        """Withdraw a stream: admission slot, router binding, and any
+        paged-KV blocks still held for it (a stream evicted by failure or
+        shed by degraded admission may leave reservations behind if its
+        generating thread is gone; ``missing_ok`` makes the free race-safe
+        against that thread's own cleanup).  Never call while the stream
+        has a device call in flight."""
         self.admission.remove(name)
         self.pool.remove(name)
         self._streams.pop(name, None)
+        self._shed.discard(name)
+        for si, seq_id in self._held.pop(name, set()):
+            if si is None:
+                with self._kv_lock:
+                    self.kv.free_seq(seq_id, missing_ok=True)
+            else:
+                state = self._paged[si]
+                with state.lock:
+                    state.mgr.free_seq(seq_id, missing_ok=True)
 
     # -- bucket auto-tuning (cost-model driven) ----------------------------
     def tune_buckets(self, prompt_lengths, *, steps_hint: int = 0,
@@ -509,12 +563,17 @@ class ServeEngine:
             blocks = state.mgr.seqs[seq_id].blocks
             table = np.full((state.nb_max,), state.scratch_block, np.int32)
             table[: len(blocks)] = blocks
-            return seq_id, table
+        self._held.setdefault(name, set()).add((si, seq_id))
+        return seq_id, table
 
     def _paged_release(self, si: int, seq_id: str) -> None:
+        name = seq_id.rsplit("#", 1)[0]
+        held = self._held.get(name)
+        if held is not None:
+            held.discard((si, seq_id))
         state = self._paged[si]
         with state.lock:
-            state.mgr.free_seq(seq_id)
+            state.mgr.free_seq(seq_id, missing_ok=True)
 
     # -- batched prefill (length-bucketed) ---------------------------------
     def _run_prefill_batch(self, si: int, bucket: int):
@@ -708,15 +767,73 @@ class ServeEngine:
         """Continuous-batching path: length-bucketed batched prefill through
         the pool, insert into a slot (dense row) or the block pools (paged),
         then submit each decode step as a batchable request that the server
-        coalesces — and, when paged, compacts — with other streams' steps."""
+        coalesces — and, when paged, compacts — with other streams' steps.
+
+        Stream recovery: when the stream's server dies mid-job
+        (``ServerFailedError`` from any segment), the per-job _RecoveryLog
+        holds the retained token prefix; after degraded-mode re-admission
+        routes the stream to a survivor, the attempt re-prefills that prefix
+        through the SAME bucketed prefill path and decoding resumes at the
+        failed step — greedy tokens stay bit-identical to a failure-free
+        run.  A stream shed by degraded admission raises StreamShedError."""
         if prompt.shape[0] != 1:
             raise ValueError("batched decode serves one sequence per stream "
                              f"job; got prompt batch {prompt.shape[0]}")
+        if prompt.shape[1] + steps > self.max_seq:
+            raise ValueError(f"prompt {prompt.shape[1]} + steps {steps} "
+                             f"exceeds max_seq {self.max_seq}")
+        res = GenerationResult()
+        log = _RecoveryLog(prompt=np.asarray(prompt[0], np.int32))
+        while True:
+            si = self._await_server(name)
+            try:
+                self._attempt_batched(name, si, log, steps, res)
+                return res
+            except ServerFailedError:
+                # the server declared itself dead (device loss / exhausted
+                # transient retries) or the heartbeat monitor evicted it;
+                # either way run recovery — idempotent if already handled —
+                # then loop: re-admission has either moved us or shed us
+                self._on_server_death(si)
+                res.recoveries += 1
+
+    def _await_server(self, name: str, timeout_s: float = 5.0) -> int:
+        """The stream's current server index, waiting out an in-flight
+        recovery (the evict happens before the re-assign, so a client can
+        observe the gap); raises StreamShedError once the stream is shed or
+        recovery never re-placed it."""
+        deadline = time.monotonic() + timeout_s
+        while True:
+            if name in self._shed:
+                raise StreamShedError(
+                    f"stream {name!r} shed by degraded-mode admission")
+            try:
+                return self.pool.server_of(name)
+            except KeyError:
+                if time.monotonic() >= deadline:
+                    raise StreamShedError(
+                        f"stream {name!r} lost its server and was not "
+                        "re-placed") from None
+                time.sleep(0.001)
+
+    def _attempt_batched(self, name: str, si: int, log: _RecoveryLog,
+                         steps: int, res: GenerationResult) -> None:
+        """One attempt on server ``si``: prefill the retained prefix, then
+        decode until ``res`` holds ``steps`` tokens.  Owns its reservation
+        and slot (released on ANY exit, so a failed attempt leaks nothing).
+
+        Token accounting keeps recovery bit-identical: on the first attempt
+        the prefill argmax is the decode-step-0 input (recorded, not
+        appended); on a recovery attempt the prefix already CONTAINS that
+        token, so the re-prefill's last-position argmax IS the failed step's
+        output and is appended directly.  The reservation shrinks exactly in
+        step: prefix_len + remaining_feeds == prompt_len + steps always."""
         spec = self._streams[name]
         prio = self.straggler.boost(name, spec.priority)
-        si = self.pool.server_of(name)
-        res = GenerationResult()
-        true_len = prompt.shape[1]
+        prefix = log.retained_prefix()
+        true_len = int(prefix.shape[0])
+        append_first = log.first_token is not None
+        feeds = steps - len(res.tokens) - (1 if append_first else 0)
         bucket = bucket_up(true_len, self.prefill_buckets)
         if self._warm_prefill:
             # traffic-aware precompile warmed a subset of pad lengths:
@@ -727,49 +844,63 @@ class ServeEngine:
                            if b >= true_len})
             if warm:
                 bucket = warm[0]
-        if true_len + steps > self.max_seq:
-            raise ValueError(f"prompt {true_len} + steps {steps} exceeds "
-                             f"max_seq {self.max_seq}")
 
+        # every submit is pinned to server object ``si`` — NOT routed by
+        # stream name — so if a concurrent recovery re-binds this stream
+        # mid-attempt, the next segment hits the DEAD server and raises
+        # ServerFailedError instead of silently running against the new
+        # server's pools with this attempt's (old-server) block table
+        server = self.pool.servers[si]
         seq_id = table = None
         if self.paged:
-            seq_id, table = self._paged_reserve(si, name, true_len, steps,
+            seq_id, table = self._paged_reserve(si, name, true_len, feeds,
                                                 bucket)
         else:
-            seq_id = self._kv_reserve(name, prompt, steps)
+            seq_id = self._kv_reserve(name, prefix[None, :], feeds)
         try:
             slot = self._acquire_slot(si)
             try:
                 t0 = time.monotonic()
-                req = self.pool.submit_batch(
-                    name, (np.asarray(prompt[0], np.int32), true_len),
+                req = server.submit_batch(
+                    (prefix, true_len),
                     run_batch=self._run_prefill_batch(si, bucket),
                     batch_key=("prefill", si, bucket), priority=prio,
                     name=f"{name}/prefill")
                 row_logits, cache, src_row = req.wait()
                 if self.paged:
-                    self.pool.submit(
-                        name, lambda: self._insert_slot_paged(
+                    server.submit(
+                        lambda: self._insert_slot_paged(
                             si, cache, src_row, table),
                         priority=prio, name=f"{name}/insert").wait()
                 else:
-                    self.pool.submit(
-                        name, lambda: self._insert_slot(
+                    server.submit(
+                        lambda: self._insert_slot(
                             si, slot, cache, src_row),
                         priority=prio, name=f"{name}/insert").wait()
                 res.prefill_latency_s = time.monotonic() - t0
                 self.straggler.observe(name, res.prefill_latency_s * 1e3)
 
                 token = int(np.argmax(row_logits))
+                if append_first:  # recovery attempt: resume point reached
+                    res.resumed_at_monotonic.append(time.monotonic())
+                    res.tokens.append(token)
+                    log.generated.append(token)
+                else:
+                    log.first_token = token
                 length = true_len
                 run_batch = (self._run_paged_decode(si) if self.paged
                              else self._run_decode_batch(si))
-                for i in range(steps):
+                i = 0
+                while len(res.tokens) < steps:
+                    if name in self._shed:
+                        raise StreamShedError(
+                            f"stream {name!r} shed by degraded-mode "
+                            "admission")
                     payload = ((token, table, length) if self.paged
                                else (slot, token))
                     t1 = time.monotonic()
-                    req = self.pool.submit_batch(
-                        name, payload, run_batch=run_batch,
+                    req = server.submit_batch(
+                        payload, run_batch=run_batch,
                         batch_key=("decode", si), priority=prio,
                         name=f"{name}/decode{i}")
                     row = req.wait()  # this row's logits, np.float32 (V,)
@@ -779,6 +910,8 @@ class ServeEngine:
                     token = int(np.argmax(row))
                     length += 1
                     res.tokens.append(token)
+                    log.generated.append(token)
+                    i += 1
             finally:
                 self._release_slot(si, slot)
         finally:
@@ -786,7 +919,6 @@ class ServeEngine:
                 self._paged_release(si, seq_id)
             else:
                 self._kv_release(seq_id)
-        return res
 
     # -- shared helpers -----------------------------------------------------
     def _prefill_batch(self, prompt: np.ndarray) -> dict:
@@ -811,12 +943,95 @@ class ServeEngine:
             except Exception:
                 self.kv.free_seq(seq_id)
                 raise
-            return seq_id
+        self._held.setdefault(name, set()).add((None, seq_id))
+        return seq_id
 
     def _kv_release(self, seq_id) -> None:
         if seq_id is not None:
+            held = self._held.get(seq_id.rsplit("#", 1)[0])
+            if held is not None:
+                held.discard((None, seq_id))
             with self._kv_lock:
-                self.kv.free_seq(seq_id)
+                self.kv.free_seq(seq_id, missing_ok=True)
+
+    # -- fault tolerance ----------------------------------------------------
+    def enable_fault_tolerance(self, *, heartbeat_timeout_s: float = 0.5,
+                               poll_s: float = 0.02, max_retries: int = 2,
+                               retry_backoff_s: float = 0.005,
+                               watchdog: bool = False) -> "ServeEngine":
+        """Switch on failure detection + stream recovery.
+
+        Wires the pool's HeartbeatMonitor (servers beat between device
+        calls, so a call outlasting ``heartbeat_timeout_s`` is a stall —
+        the monitor thread evicts the server from outside, making the
+        timeout per-device-call), sets each server's transient-error retry
+        budget, optionally attaches a StepTimeWatchdog, and installs
+        ``_on_server_death`` as the pool's death handler so eviction flows
+        into degraded-mode re-admission instead of blind re-routing.
+        Returns self for chaining."""
+        for s in self.pool.servers:
+            s.max_retries = max_retries
+            s.retry_backoff_s = retry_backoff_s
+            if watchdog and s.watchdog is None:
+                s.watchdog = StepTimeWatchdog()
+        self.pool.enable_failure_detection(
+            timeout=heartbeat_timeout_s, poll=poll_s,
+            on_death=self._on_server_death)
+        return self
+
+    def _on_server_death(self, si: int, displaced=None) -> None:
+        """Single recovery entry point, reached from the heartbeat monitor
+        (stall), a server's own failure callback (device loss), or a client
+        thread that caught ServerFailedError.  Serialized and idempotent:
+        whichever caller evicts the server runs degraded-mode re-admission;
+        everyone else returns once it is done.
+
+        Surviving displaced streams are re-bound to the device degraded
+        admission proved them on (with their priced recovery segment);
+        unfitting streams are shed in reverse-priority order and their
+        generator threads observe ``_shed`` at the next segment boundary."""
+        with self._recovery_lock:
+            if displaced is None:
+                displaced = self.pool.evict_server(si, reroute=False)
+            if displaced is None:
+                return  # another caller already recovered this server
+            report = self.admission.evict_device(
+                si, recovery_cost_ms=self._recovery_cost_ms)
+            for s, d in report.moved.items():
+                task = next(t for t in self.admission.devices[d].streams
+                            if t.name == s)
+                self.pool.reassign(s, d, utilization=task.G / task.T,
+                                   priority=task.priority)
+            for s in report.shed:
+                self._shed.add(s)
+            self.degraded_reports.append(report)
+
+    def _recovery_cost_ms(self, task: Task) -> float:
+        """Price a stream's recovery segment — the re-prefill of its
+        retained prefix on the surviving device.  Declared worst case is
+        the stream's own prefill cost; a fitted cost model caps it at the
+        predicted cost of the largest prefill bucket (never upward,
+        mirroring calibrated admission's min())."""
+        spec = self._streams.get(task.name)
+        declared = (spec.prefill_ms if spec is not None
+                    else task.segments[0].total)
+        if self.cost_model is not None:
+            pred = self.cost_model.predict("prefill", 1,
+                                           self.prefill_buckets[-1])
+            if math.isfinite(pred):
+                pred_ms = pred * getattr(self.cost_model, "safety", 1.0) * 1e3
+                declared = min(declared, pred_ms) if declared > 0 else pred_ms
+        return float(declared)
+
+    def kv_blocks_in_use(self) -> int:
+        """Blocks currently allocated across every KV manager, excluding
+        each paged server's permanently-held scratch block — i.e. the count
+        that must return to zero once all streams drain (the chaos suite's
+        leak check)."""
+        total = self.kv.blocks_in_use if self.kv is not None else 0
+        if self.paged:
+            total += sum(st.mgr.blocks_in_use - 1 for st in self._paged)
+        return total
 
     def close(self) -> None:
         self.pool.shutdown()

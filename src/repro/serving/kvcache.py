@@ -120,12 +120,25 @@ class PagedKVCacheManager:
             self.refcount[b] += 1
         self.seqs[dst_id] = SeqAlloc(list(src.blocks), src.length)
 
-    def free_seq(self, seq_id: str) -> None:
-        a = self.seqs.pop(seq_id)
+    def free_seq(self, seq_id: str, *, missing_ok: bool = False) -> None:
+        """Release a sequence's blocks.  ``missing_ok`` makes the free
+        idempotent — the fault-recovery paths (stream eviction, engine
+        ``remove``) may race the generating thread's own cleanup, and
+        whichever frees second must be a no-op, not a KeyError."""
+        a = self.seqs.pop(seq_id, None)
+        if a is None:
+            if missing_ok:
+                return
+            raise KeyError(seq_id)
         for b in a.blocks:
             self.refcount[b] -= 1
             if self.refcount[b] == 0:
                 self.free.append(b)
+
+    def seq_ids(self, prefix: str = "") -> list[str]:
+        """Live sequence ids, optionally filtered by stream-name prefix
+        (engine sequence ids are ``f"{stream}#{counter}"``)."""
+        return [s for s in self.seqs if s.startswith(prefix)]
 
     # -- tables -------------------------------------------------------------
     def block_table(self, seq_id: str, *, max_blocks: int) -> list[int]:

@@ -54,6 +54,34 @@ class TestHeartbeat:
             mon.close()
 
 
+    def test_context_manager_and_no_callback_after_close(self):
+        """close() must guarantee no on_failure fires after it returns —
+        the pool tears the monitor down FIRST on shutdown, and a late
+        callback would race eviction into a half-closed pool."""
+        failures = []
+        with HeartbeatMonitor(timeout=0.05, poll=0.01,
+                              on_failure=failures.append) as mon:
+            mon.register("w0")
+        # w0 is now overdue, but the monitor is closed: repeatedly give the
+        # (dead) thread a chance to misfire
+        time.sleep(0.2)
+        assert failures == []
+        mon.close()  # idempotent
+
+    def test_unregister_stops_tracking(self):
+        failures = []
+        mon = HeartbeatMonitor(timeout=0.1, poll=0.02,
+                               on_failure=failures.append)
+        try:
+            mon.register("gone")
+            mon.unregister("gone")
+            time.sleep(0.3)
+            assert failures == []
+            assert mon.alive_workers() == []
+        finally:
+            mon.close()
+
+
 class TestElastic:
     def test_shrinks_data_axis_only(self):
         plan = plan_after_failure(256, model=16, global_batch=256)
@@ -79,6 +107,20 @@ class TestStraggler:
             assert not wd.observe(0.1)
         assert wd.observe(0.5)
         assert len(wd.flagged) == 1
+
+    def test_watchdog_escalates_consecutive_stragglers(self):
+        """escalate_after consecutive slow steps flips ``degraded``; one
+        healthy step resets the streak."""
+        wd = StepTimeWatchdog(factor=3.0, min_samples=5, escalate_after=3)
+        for _ in range(10):
+            wd.observe(0.1)
+        wd.observe(0.5), wd.observe(0.5)
+        assert not wd.degraded
+        wd.observe(0.1)  # streak broken
+        wd.observe(0.5), wd.observe(0.5)
+        assert not wd.degraded
+        wd.observe(0.5)
+        assert wd.degraded
 
     def test_deadline_policy_boosts_at_risk(self):
         pol = DeadlineAwarePolicy(margin=0.8)

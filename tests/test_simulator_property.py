@@ -44,6 +44,7 @@ except ImportError:  # deterministic fallback sampler
 
 from repro.core import fmlp_analysis, mpcp_analysis, server_analysis, simulator
 from repro.core.allocation import allocate, allocate_pool
+from repro.core.faults import seeded_device_faults
 from repro.core.taskset_gen import GenParams, generate_taskset
 
 
@@ -151,6 +152,60 @@ def test_pool_analysis_dominates_under_bucketed_coalescing(seed):
                     f"{t.name} (batch_max={batch_max}): simulated "
                     f"{sim.wcrt(t.name)} > pool analysis bound {bound}"
                 )
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_faulted_analysis_dominates_simulation_under_failures(seed):
+    """Recovery-augmented bound soundness: under a seeded device-fault
+    schedule (device dies mid-traffic, tasks migrate to the failover target
+    after the detection gap, each re-submitting with its recovery segment
+    folded in), the per-task bound of ``analyze_pool_under_faults`` —
+    sum of per-phase Eqs (1)-(6) bounds plus detection gaps — must dominate
+    the simulated WCRT of the batched dispatcher replaying the SAME
+    schedule.  The simulator deliberately under-approximates the analysis's
+    failure model (recovery folded into the re-submitted segment, no extra
+    server invocation), so domination is required, not lucky."""
+    rng = random.Random(seed)
+    params = GenParams(num_cores=4, num_tasks=(4, 10), epsilon_ms=0.05)
+    tasks = generate_taskset(params, rng)
+    system = allocate_pool(tasks, 3, 2, epsilon=params.epsilon_ms)
+    horizon = _horizon(system)
+    faults = seeded_device_faults(system, seed, num_faults=1,
+                                  horizon_ms=horizon, detect_ms=1.0)
+    res = server_analysis.analyze_pool_under_faults(system, faults)
+    sim = simulator.simulate(system, mode="server_batched",
+                             horizon_ms=horizon, batch_max=4, faults=faults)
+    for t in system.tasks:
+        bound = res.wcrt(t.name)
+        observed = sim.wcrt(t.name)
+        if not math.isinf(bound):
+            assert observed <= bound + 1e-3, (
+                f"{t.name} (device {t.device}, faults {faults}): simulated "
+                f"{observed} > recovery-augmented bound {bound}"
+            )
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_faulted_bound_dominates_fault_free_phase(seed):
+    """The recovery-augmented bound can only grow: for every task it is >=
+    the fault-free phase-0 bound, and the excess is exactly the reported
+    per-task recovery delay."""
+    rng = random.Random(seed)
+    params = GenParams(num_cores=4, num_tasks=(4, 10), epsilon_ms=0.05)
+    tasks = generate_taskset(params, rng)
+    system = allocate_pool(tasks, 3, 2, epsilon=params.epsilon_ms)
+    faults = seeded_device_faults(system, seed, num_faults=2,
+                                  horizon_ms=_horizon(system), detect_ms=2.0)
+    res = server_analysis.analyze_pool_under_faults(system, faults)
+    base = server_analysis.analyze_pool(system)
+    for t in system.tasks:
+        b0, bf = base.wcrt(t.name), res.wcrt(t.name)
+        if math.isinf(b0) or math.isinf(bf):
+            continue
+        assert bf >= b0 - 1e-9
+        assert abs((bf - b0) - res.recovery_delay[t.name]) <= 1e-6
 
 
 @given(seed=st.integers(0, 10_000))
