@@ -9,11 +9,14 @@
 # capacity; writes BENCH_cost_model.json (tracked) and FAILS when the
 # median predicted-vs-measured relative error blows past its threshold or
 # calibrated admission stops beating the worst-case declaration.
+# `make test-scenarios` runs the scenario-engine property pass (bound >=
+# simulated WCRT on every CI matrix cell, bit-identical seeded replay,
+# golden replay against the legacy simulator paths).
 
 PYTEST = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 PYRUN = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast test-chaos bench-smoke bench-calibrate
+.PHONY: test test-fast test-chaos test-scenarios bench-smoke bench-calibrate
 
 test:
 	$(PYTEST)
@@ -27,10 +30,16 @@ test-fast:
 test-chaos:
 	$(PYTEST) tests/test_chaos.py
 
+# registry-driven scenario matrix: every arrival model x protocol cell the
+# analysis claims to cover, property-tested bound >= simulated WCRT
+test-scenarios:
+	$(PYTEST) tests/test_scenarios.py
+
 bench-smoke:
 	$(PYRUN) benchmarks/batching_throughput.py --paged-sweep --smoke
 	$(PYRUN) benchmarks/cost_model_calibrate.py --smoke
 	$(PYRUN) benchmarks/recovery_latency.py --smoke
+	$(PYRUN) benchmarks/scenario_matrix.py --smoke
 
 bench-calibrate:
 	$(PYRUN) benchmarks/cost_model_calibrate.py

@@ -3,9 +3,12 @@ table from the multi-pod dry-run artifacts.
 
 Usage:
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME[,NAME...]]
+    PYTHONPATH=src python -m benchmarks.run --scenario NAME [--seeds 0,1,2]
 
 Output: CSV rows on stdout (also mirrored into bench_output.txt by the
 top-level run command).  --full uses the paper's 10,000 tasksets per point.
+--scenario resolves NAME through the ``repro.scenarios`` registry (any CI
+matrix preset, e.g. flash_crowd) and prints bound-vs-WCRT per seed.
 """
 
 from __future__ import annotations
@@ -16,7 +19,8 @@ import time
 
 
 def _registry():
-    from . import case_study, fig16_fifo_server, overheads, roofline_table
+    from . import (case_study, fig16_fifo_server, overheads, roofline_table,
+                   scenario_matrix)
     from .figures import ALL_FIGURES
 
     entries: dict[str, object] = {f.__name__: f for f in ALL_FIGURES}
@@ -24,6 +28,7 @@ def _registry():
     entries["case_study"] = case_study.run
     entries["overheads"] = overheads.run
     entries["roofline_table"] = roofline_table.run
+    entries["scenario_matrix"] = scenario_matrix.run
     return entries
 
 
@@ -33,7 +38,20 @@ def main() -> None:
                     help="paper-scale: 10,000 tasksets per point")
     ap.add_argument("--only", type=str, default="",
                     help="comma-separated benchmark names")
+    ap.add_argument("--scenario", type=str, default="",
+                    help="run one named scenario from the repro.scenarios "
+                         "registry instead of the benchmark sweep")
+    ap.add_argument("--seeds", type=str, default="0,1,2",
+                    help="comma-separated seeds for --scenario")
     args = ap.parse_args()
+
+    if args.scenario:
+        from .sched_common import scenario_rows
+
+        seeds = [int(s) for s in args.seeds.split(",") if s]
+        for row in scenario_rows(args.scenario, seeds):
+            print(row)
+        return
 
     entries = _registry()
     names = [n for n in args.only.split(",") if n] or list(entries)

@@ -21,6 +21,24 @@ from repro.core.taskset_gen import GenParams, generate_taskset
 APPROACHES = ("server", "mpcp", "fmlp")
 
 
+def scenario_rows(name: str, seeds: list[int]) -> list[str]:
+    """Run one named scenario from the ``repro.scenarios`` registry across
+    ``seeds`` (the `--scenario` CLI path).  Unknown names raise
+    ``RegistryError`` listing the available presets."""
+    from repro.scenarios import SCENARIOS, default_cost_model, run
+
+    cost_model = default_cost_model()
+    rows = [f"scenario,{name}", "seed,num_tasks,schedulable,any_miss,"
+            "max_wcrt_ms,min_bound_slack_ms"]
+    for seed in seeds:
+        s = run(SCENARIOS.create(name, seed=seed),
+                cost_model=cost_model).summary()
+        rows.append(f"{seed},{s['num_tasks']},{s['schedulable']},"
+                    f"{s['any_miss']},{s['max_wcrt_ms']},"
+                    f"{s['min_bound_slack_ms']}")
+    return rows
+
+
 def num_tasksets(full: bool) -> int:
     env = os.environ.get("REPRO_BENCH_TASKSETS")
     if env:

@@ -10,6 +10,9 @@ evaluates (plus the batched extension):
     eps, matching Figure 4.
   * ``server_fifo`` — same server, FIFO-ordered queue (the paper's §7 /
     Fig. 15 future-work variant).
+  * ``server_edf`` — beyond-paper: the server dequeues by earliest absolute
+    job deadline (the ``dispatch.policy`` 'edf' ordering); analyzed by the
+    order-agnostic job-driven bound (``server_analysis.analyze_edf_server``).
   * ``server_batched`` — beyond-paper: the server coalesces queued
     same-shape requests (identical (G^e, G^m)) into one accelerator call of
     up to ``batch_max`` requests: G^e and G^m are paid once per batch, the
@@ -36,6 +39,16 @@ Job structure: a task's C is split into eta+1 equal normal chunks interleaved
 with its GPU segments (an explicit per-task split can be supplied for case
 studies).  Within a GPU segment, misc time is split half before / half after
 the pure-GPU span, matching Figure 4's depiction.
+
+The scenario engine (``repro.scenarios``) plugs in through two hooks, both
+defaulting to the legacy behavior bit-for-bit:
+
+  * ``releases`` — explicit per-task release instants (arrival models:
+    sporadic slack, bursts, diurnal modulation, recorded traces) instead of
+    the built-in strictly periodic release loop;
+  * ``etm`` — per-job actual execution times (execution-time models: table,
+    random, measured step costs) instead of every job running at its
+    declared worst case.
 """
 
 from __future__ import annotations
@@ -235,7 +248,7 @@ class _GpuServer:
                  name: str = "__gpu_server__"):
         self.eng = eng
         self.eps = eps
-        self.ordering = ordering  # "priority" | "fifo" (paper §7 extension)
+        self.ordering = ordering  # dispatch.policy key: priority | fifo | edf
         self.batch_max = batch_max
         self.queue: list[tuple[float, int, object]] = []  # (key, seq, req)
         self.seq = 0
@@ -258,7 +271,8 @@ class _GpuServer:
 
     def drain_orphans(self) -> list:
         """All parked requests — in-flight first (they waited longest), then
-        the frozen queue in policy order — as (prio, seg_e, seg_m, cb)."""
+        the frozen queue in policy order — as (prio, seg_e, seg_m, cb,
+        deadline)."""
         orphans = list(self.inflight or [])
         self.inflight = None
         for item in sorted(self.queue):
@@ -296,11 +310,13 @@ class _GpuServer:
             self.eng.run_burst(self.thread, dur, "server", done)
 
     # -- protocol -----------------------------------------------------------
-    def submit(self, prio: int, seg_e: int, seg_m: int, on_complete) -> None:
+    def submit(self, prio: int, seg_e: int, seg_m: int, on_complete,
+               deadline: float | None = None) -> None:
         self.seq += 1
-        key = request_key(self.ordering, priority=prio)
+        key = request_key(self.ordering, priority=prio, deadline=deadline)
         heapq.heappush(self.queue,
-                       (key, self.seq, (prio, seg_e, seg_m, on_complete)))
+                       (key, self.seq, (prio, seg_e, seg_m, on_complete,
+                                        deadline)))
         if self.dead:
             return  # parked: recovered at the detection instant
         if self.batch_max > 1:
@@ -322,16 +338,17 @@ class _GpuServer:
     def _pop_batch(self) -> tuple[int, int, list]:
         """Pop the head request plus every same-shape request (identical
         (G^e, G^m)) up to batch_max; returns (seg_e, seg_m, batch) with
-        batch entries (prio, seg_e, seg_m, on_complete)."""
-        _, _, (prio, seg_e, seg_m, on_complete) = heapq.heappop(self.queue)
-        batch = [(prio, seg_e, seg_m, on_complete)]
+        batch entries (prio, seg_e, seg_m, on_complete, deadline)."""
+        _, _, head = heapq.heappop(self.queue)
+        seg_e, seg_m = head[1], head[2]
+        batch = [head]
         if self.batch_max > 1 and self.queue:
             keep = []
             for item in sorted(self.queue):  # queue-policy order
-                _, _, (p2, e2, m2, cb2) = item
-                if (len(batch) < self.batch_max and e2 == seg_e
-                        and m2 == seg_m):
-                    batch.append((p2, e2, m2, cb2))
+                req = item[2]
+                if (len(batch) < self.batch_max and req[1] == seg_e
+                        and req[2] == seg_m):
+                    batch.append(req)
                 else:
                     keep.append(item)
             self.queue = keep
@@ -344,7 +361,7 @@ class _GpuServer:
         self.gpu_busy = True
         seg_e, seg_m, batch = self._pop_batch()
         self.inflight = batch
-        callbacks = [cb for _, _, _, cb in batch]
+        callbacks = [req[3] for req in batch]
         m1 = seg_m // 2
         m2 = seg_m - m1
 
@@ -412,19 +429,26 @@ class _GpuLock:
 
 
 class _Job:
-    def __init__(self, sim: "_Sim", task: Task, release: int):
+    def __init__(self, sim: "_Sim", task: Task, release: int, index: int = 0):
         self.sim = sim
         self.task = task
         self.release = release
-        eta = task.eta
+        # per-job actual costs: the execution-time model prices this job
+        # (declared worst case when no model is plugged in)
+        if sim.etm is None:
+            C_ms, self.segs = task.C, task.segments
+        else:
+            C_ms, self.segs = sim.etm(task, index)
+        eta = len(self.segs)
         # normal chunks: explicit split if provided, else eta+1 equal chunks
         split = sim.splits.get(task.name)
         if split is None:
-            chunk = _ns(task.C) // (eta + 1)
-            last = _ns(task.C) - chunk * eta
+            chunk = _ns(C_ms) // (eta + 1)
+            last = _ns(C_ms) - chunk * eta
             self.chunks = [chunk] * eta + [last]
         else:
             self.chunks = [_ns(c) for c in split]
+        self.deadline_ms = (release + _ns(task.D)) / NS_PER_MS
         self.phase = 0  # 0..eta: index of next normal chunk
         self.thread = _Thread(task.name, task.core, task.priority)
 
@@ -435,8 +459,8 @@ class _Job:
         self.sim.eng.run_burst(self.thread, self.chunks[self.phase], "cpu", self._chunk_done)
 
     def _chunk_done(self) -> None:
-        if self.phase < self.task.eta:
-            seg = self.task.segments[self.phase]
+        if self.phase < len(self.segs):
+            seg = self.segs[self.phase]
             self.phase += 1
             self.sim.gpu_access(self, seg)
         else:
@@ -465,6 +489,8 @@ class _Sim:
         offsets: dict[str, float] | None,
         batch_max: int = 1,
         faults: list[DeviceFault] | None = None,
+        releases: dict[str, list[float]] | None = None,
+        etm=None,
     ):
         self.system = system
         self.mode = mode
@@ -472,21 +498,25 @@ class _Sim:
         self.result = SimResult()
         self.splits = splits or {}
         self.offsets = offsets or {}
+        self.releases = releases
+        self.etm = etm
         self.horizon = _ns(horizon_ms)
         self.faults = sorted(faults or [], key=lambda f: f.at_ms)
-        if self.faults and mode not in ("server", "server_fifo",
-                                        "server_batched"):
+        server_modes = ("server", "server_fifo", "server_edf",
+                        "server_batched")
+        if self.faults and mode not in server_modes:
             raise ValueError("fault injection requires a server mode")
         self.device_map = list(range(max(system.num_gpus, 1)))
         for f in self.faults:
             if not (0 <= f.device < len(self.device_map)
                     and 0 <= f.to < len(self.device_map)):
                 raise ValueError(f"fault device outside pool: {f}")
-        if mode in ("server", "server_fifo", "server_batched"):
+        if mode in server_modes:
             cores = system.server_cores
             if not cores:
                 raise ValueError("server mode needs system.server_core(s) set")
-            ordering = "fifo" if mode == "server_fifo" else "priority"
+            ordering = {"server_fifo": "fifo", "server_edf": "edf"}.get(
+                mode, "priority")
             bmax = batch_max if mode == "server_batched" else 1
             self.servers = [
                 _GpuServer(self.eng, core, _ns(system.epsilon),
@@ -519,15 +549,16 @@ class _Sim:
         self.device_map[f.device] = f.to
         target = self.servers[self._route(f.to)]
         rec_e, rec_m = _ns(f.recovery.e), _ns(f.recovery.m)
-        for prio, e, m, cb in self.servers[f.device].drain_orphans():
-            target.submit(prio, e + rec_e, m + rec_m, cb)
+        for prio, e, m, cb, deadline in self.servers[f.device].drain_orphans():
+            target.submit(prio, e + rec_e, m + rec_m, cb, deadline)
 
     def gpu_access(self, job: _Job, seg) -> None:
         e_ns, m_ns = _ns(seg.e), _ns(seg.m)
         if self.mode == "server":
             # client suspends; its device's server handles the segment
             server = self.servers[self._route(job.task.device)]
-            server.submit(job.task.priority, e_ns, m_ns, job.gpu_done)
+            server.submit(job.task.priority, e_ns, m_ns, job.gpu_done,
+                          job.deadline_ms)
         else:
             th = job.thread
             lock = self.locks[job.task.device]
@@ -553,12 +584,23 @@ class _Sim:
             self.eng.post(_ns(f.at_ms + f.detect_ms),
                           lambda f=f: self._recover(f))
         for task in self.system.tasks:
-            off = _ns(self.offsets.get(task.name, 0.0))
-            t = off
-            while t < self.horizon:
-                rel = t
-                self.eng.post(rel, lambda task=task, rel=rel: _Job(self, task, rel).start())
-                t += _ns(task.T)
+            rel_list = (self.releases.get(task.name)
+                        if self.releases is not None else None)
+            if rel_list is None:
+                # legacy strictly periodic release loop (ns accumulation)
+                off = _ns(self.offsets.get(task.name, 0.0))
+                rel_ns = []
+                t = off
+                while t < self.horizon:
+                    rel_ns.append(t)
+                    t += _ns(task.T)
+            else:
+                rel_ns = [_ns(r) for r in rel_list if _ns(r) < self.horizon]
+            for idx, rel in enumerate(rel_ns):
+                self.eng.post(
+                    rel,
+                    lambda task=task, rel=rel, idx=idx:
+                        _Job(self, task, rel, idx).start())
         self.eng.run(self.horizon)
         self.result.trace = self.eng.trace
         return self.result
@@ -574,21 +616,35 @@ def simulate(
     offsets: dict[str, float] | None = None,
     batch_max: int = 4,
     faults: list[DeviceFault] | None = None,
+    releases: dict[str, list[float]] | None = None,
+    etm=None,
 ) -> SimResult:
     """Simulate ``system`` for ``horizon_ms`` under ``mode`` in
-    {'server','server_fifo','server_batched','mpcp','fmlp'}.  Jobs are
-    released periodically (synchronous release at t=0 unless per-task
-    ``offsets`` are given).  ``splits`` may supply an explicit normal-chunk
-    split (list of ms, length eta+1) per task name.  ``batch_max`` caps the
-    coalesced batch size in 'server_batched' mode (ignored otherwise).
-    Multi-accelerator systems (``System.server_cores``) run one server (or
-    mutex) per device, routed by each task's ``device``.
+    {'server','server_fifo','server_edf','server_batched','mpcp','fmlp'}.
+    Jobs are released periodically (synchronous release at t=0 unless
+    per-task ``offsets`` are given).  ``splits`` may supply an explicit
+    normal-chunk split (list of ms, length eta+1) per task name.
+    ``batch_max`` caps the coalesced batch size in 'server_batched' mode
+    (ignored otherwise).  Multi-accelerator systems (``System.server_cores``)
+    run one server (or mutex) per device, routed by each task's ``device``.
 
     ``faults`` (server modes only) injects ``core.faults.DeviceFault``
     device deaths: at ``at_ms`` the device stops mid-work; at
     ``at_ms + detect_ms`` its orphaned requests re-submit to device ``to``
     with the recovery cost folded in, and its tasks re-route there for the
     rest of the run.  ``server_analysis.analyze_pool_under_faults`` prices
-    the same schedule analytically; bound >= sim is property-tested."""
+    the same schedule analytically; bound >= sim is property-tested.
+
+    Scenario-engine hooks (``repro.scenarios`` wires both; each defaults to
+    the legacy behavior exactly):
+
+    * ``releases`` maps task name -> sorted absolute release instants (ms);
+      tasks absent from the mapping release periodically.  Generators must
+      respect each task's minimum inter-arrival time T for the analyses to
+      stay sound.
+    * ``etm(task, job_index) -> (C_ms, segments)`` prices each job's actual
+      execution; costs must stay within the declared worst case, with the
+      declared segment count."""
     return _Sim(system, mode, horizon_ms, trace, splits, offsets,
-                batch_max=batch_max, faults=faults).run()
+                batch_max=batch_max, faults=faults, releases=releases,
+                etm=etm).run()

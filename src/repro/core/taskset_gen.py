@@ -44,6 +44,10 @@ class GenParams:
     # the "large" range; None disables bimodal mode.
     bimodal_large_fraction: float | None = None
     util_large: tuple[float, float] = (0.2, 0.5)
+    # how G_i is split across the eta_i segments: "uniform" (simplex, the
+    # paper's setup) or "heavy" (Pareto-weighted — one dominant long-context
+    # segment per task, the adversarial blocking shape).
+    seg_split: str = "uniform"
 
     def task_count_range(self) -> tuple[int, int]:
         if self.num_tasks is not None:
@@ -51,10 +55,19 @@ class GenParams:
         return (2 * self.num_cores, 5 * self.num_cores)
 
 
-def _split_random(total: float, n: int, rng: random.Random) -> list[float]:
-    """Split ``total`` into n random-sized positive pieces (uniform simplex)."""
+def _split_random(total: float, n: int, rng: random.Random,
+                  mode: str = "uniform") -> list[float]:
+    """Split ``total`` into n random-sized positive pieces.  "uniform" draws
+    from the uniform simplex; "heavy" draws Pareto(alpha=1.2) weights so one
+    piece usually dominates (heavy-tailed segment lengths)."""
     if n == 1:
         return [total]
+    if mode == "heavy":
+        weights = [rng.paretovariate(1.2) for _ in range(n)]
+        s = sum(weights)
+        return [total * w / s for w in weights]
+    if mode != "uniform":
+        raise ValueError(f"unknown seg_split {mode!r}; use 'uniform' or 'heavy'")
     cuts = sorted(rng.random() for _ in range(n - 1))
     pts = [0.0, *cuts, 1.0]
     return [total * (pts[k + 1] - pts[k]) for k in range(n)]
@@ -71,7 +84,9 @@ def assign_rm_priorities(tasks: list[Task]) -> list[Task]:
     return out
 
 
-def generate_taskset(params: GenParams, rng: random.Random) -> list[Task]:
+def generate_taskset(params: GenParams, rng: random.Random | int) -> list[Task]:
+    if isinstance(rng, int):  # int seed accepted for deterministic replay
+        rng = random.Random(rng)
     lo, hi = params.task_count_range()
     n = rng.randint(lo, hi)
     pct_gpu = rng.uniform(*params.pct_gpu_tasks)
@@ -91,7 +106,7 @@ def generate_taskset(params: GenParams, rng: random.Random) -> list[Task]:
             G = C * r
             eta = rng.randint(*params.num_segments)
             segs = []
-            for g in _split_random(G, eta, rng):
+            for g in _split_random(G, eta, rng, params.seg_split):
                 mr = rng.uniform(*params.misc_ratio)
                 segs.append(GpuSegment(e=g * (1 - mr), m=g * mr))
             tasks.append(Task(name=f"tau{i}", C=C, T=T, D=T, segments=tuple(segs)))
