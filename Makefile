@@ -16,7 +16,8 @@
 PYTEST = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 PYRUN = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
-.PHONY: test test-fast test-chaos test-scenarios bench-smoke bench-calibrate
+.PHONY: test test-fast test-chaos test-migration test-scenarios \
+	bench-smoke bench-calibrate
 
 test:
 	$(PYTEST)
@@ -30,6 +31,11 @@ test-fast:
 test-chaos:
 	$(PYTEST) tests/test_chaos.py
 
+# live KV-block migration: manager corners, work stealing, consolidation,
+# elastic scale-up/down — bit-identical tokens and zero leaks throughout
+test-migration:
+	$(PYTEST) tests/test_migration.py
+
 # registry-driven scenario matrix: every arrival model x protocol cell the
 # analysis claims to cover, property-tested bound >= simulated WCRT
 test-scenarios:
@@ -40,6 +46,7 @@ bench-smoke:
 	$(PYRUN) benchmarks/cost_model_calibrate.py --smoke
 	$(PYRUN) benchmarks/recovery_latency.py --smoke
 	$(PYRUN) benchmarks/scenario_matrix.py --smoke
+	$(PYRUN) benchmarks/migration.py --smoke
 
 bench-calibrate:
 	$(PYRUN) benchmarks/cost_model_calibrate.py

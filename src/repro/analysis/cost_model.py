@@ -56,6 +56,7 @@ __all__ = [
     "TrafficModel",
     "autotune_buckets",
     "bucket_up",
+    "hlo_cell_features",
     "roofline_features",
 ]
 
@@ -94,6 +95,53 @@ def roofline_features(flops_of: Callable[[CellKey], float],
     def work(cell: CellKey) -> tuple[float, float]:
         return (flops_of(cell) / roofline.PEAK_FLOPS,
                 bytes_of(cell) / roofline.HBM_BW)
+
+    return work
+
+
+def hlo_cell_features(costs: Mapping[CellKey, tuple[float, float]]):
+    """Build a ``work`` callable from static HLO per-cell pricing.
+
+    ``costs`` maps CellKey -> (flops, hbm_bytes) — e.g.
+    ``ServeEngine.static_cell_costs``, which compiles each cell's trace and
+    walks the optimized HLO with ``analysis.hlo_cost``.  Listed cells get
+    their EXACT normalized roofline features; an unlisted cell of a listed
+    phase is extrapolated from a per-phase least-squares fit of the listed
+    cells' flops/bytes over the default ``[1, rows, rows*width]`` basis —
+    so a migration or scatter width never observed at runtime still prices
+    off static analysis instead of falling to ``inf``/declared worst case.
+    Phases with no static pricing at all keep the default
+    ``(rows, rows*width)`` analytic features, making this a strict
+    refinement of ``_default_work``."""
+    by_phase: dict[str, list[CellKey]] = {}
+    for cell in costs:
+        by_phase.setdefault(cell[0], []).append(cell)
+    fits: dict[str, tuple[np.ndarray, np.ndarray]] = {}
+    for phase, keys in by_phase.items():
+        X = np.array([[1.0, k[1], float(k[1]) * float(k[2])] for k in keys])
+        fl = np.array([costs[k][0] for k in keys])
+        by = np.array([costs[k][1] for k in keys])
+        tf, *_ = np.linalg.lstsq(X, fl, rcond=None)
+        tb, *_ = np.linalg.lstsq(X, by, rcond=None)
+        fits[phase] = (tf, tb)
+
+    def _static(cell: CellKey) -> tuple[float, float] | None:
+        got = costs.get(cell)
+        if got is not None:
+            return got
+        fit = fits.get(cell[0])
+        if fit is None:
+            return None
+        x = np.array([1.0, cell[1], float(cell[1]) * float(cell[2])])
+        return (max(float(fit[0] @ x), 0.0), max(float(fit[1] @ x), 0.0))
+
+    normalized = roofline_features(lambda c: _static(c)[0],
+                                   lambda c: _static(c)[1])
+
+    def work(cell: CellKey) -> tuple[float, float]:
+        if _static(cell) is None:
+            return _default_work(cell)
+        return normalized(cell)
 
     return work
 

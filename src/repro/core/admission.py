@@ -181,6 +181,13 @@ class PoolAdmissionController:
     def __init__(self, num_devices: int, *, cores_per_device: int = 2,
                  epsilon_ms: float = 0.05, heuristic: str = "wfd",
                  min_batch: int = 1, cost_model=None):
+        # kept for add_device(): an elastically-joined device gets a
+        # controller built exactly like the originals
+        self.cores_per_device = cores_per_device
+        self.epsilon_ms = epsilon_ms
+        self.heuristic = heuristic
+        self.min_batch = min_batch
+        self.cost_model = cost_model
         self.devices = [
             AdmissionController(cores_per_device, epsilon_ms=epsilon_ms,
                                 heuristic=heuristic, min_batch=min_batch,
@@ -223,6 +230,79 @@ class PoolAdmissionController:
         d = self.placement.pop(name, None)
         if d is not None:
             self.devices[d].remove(name)
+
+    # -- planned migration / elastic membership ----------------------------
+    def migrate(self, name: str, dst: int | None = None, *,
+                migration_cost_ms: float = 0.0,
+                ) -> tuple[AdmissionDecision, int]:
+        """Re-prove an admitted stream on another device before moving it.
+
+        The candidate is the stream's admitted task with the priced
+        migration segment appended — one extra GPU request of
+        ``migration_cost_ms`` (the gather/copy/scatter of its live KV
+        blocks), which also pays the server's 2*eps handling share, so the
+        move enters Eqs (1)-(6) exactly like
+        ``analyze_pool_under_migrations`` prices it.  With ``dst`` given,
+        only that device is tried (work stealing names its target);
+        otherwise worst-fit order over the other live devices
+        (consolidation lets admission choose).  On success the stream's
+        admission slot moves atomically: removed from the source
+        controller, the augmented task admitted at the destination —
+        keeping the cost segment in the destination's stream set is
+        deliberately conservative, matching the analysis side appending it
+        to every later phase.  Returns (decision, device); device is -1
+        when no destination can prove it (the stream stays put, nothing
+        changes)."""
+        src = self.placement.get(name)
+        if src is None:
+            return AdmissionDecision(False, f"unknown stream {name!r}"), -1
+        task = next(t for t in self.devices[src].streams if t.name == name)
+        mc = float(migration_cost_ms)
+        cand = (replace(task, segments=(*task.segments,
+                                        GpuSegment(e=0.9 * mc, m=0.1 * mc)))
+                if mc > 0 else task)
+        if dst is not None:
+            order = [dst]
+            if not (0 <= dst < self.num_devices) or not self.alive[dst]:
+                return AdmissionDecision(False,
+                                         f"device {dst} is not alive"), -1
+            if dst == src:
+                return AdmissionDecision(False, "already there"), -1
+        else:
+            order = sorted((d for d in range(self.num_devices)
+                            if self.alive[d] and d != src),
+                           key=self.gpu_utilization)
+        last = AdmissionDecision(False, "no destination device")
+        for d in order:
+            decision = self.devices[d].try_admit(cand)
+            if decision.admitted:
+                self.devices[src].remove(name)
+                self.placement[name] = d
+                return decision, d
+            last = decision
+        return last, -1
+
+    def add_device(self) -> int:
+        """Grow the pool by one admission partition (elastic scale-up);
+        returns its device index.  The new device starts empty and
+        immediately participates in worst-fit placement."""
+        self.devices.append(AdmissionController(
+            self.cores_per_device, epsilon_ms=self.epsilon_ms,
+            heuristic=self.heuristic, min_batch=self.min_batch,
+            cost_model=self.cost_model))
+        self.alive.append(True)
+        return len(self.devices) - 1
+
+    def drain_device(self, device: int, *, migration_cost_ms=0.0,
+                     ) -> DegradedReport:
+        """Elastic scale-down: re-prove every stream of ``device`` on the
+        remaining devices and mark the device gone.  This is exactly
+        ``evict_device`` with the extra segment priced as a migration copy
+        instead of a recovery re-prefill — a planned drain moves live KV
+        blocks (cheap) where a failure re-prefills (expensive); the
+        displacement, shedding, and schedulability machinery is identical.
+        """
+        return self.evict_device(device, recovery_cost_ms=migration_cost_ms)
 
     # -- degraded-mode admission (device failure) --------------------------
     def evict_device(self, device: int, *, recovery_cost_ms=0.0,

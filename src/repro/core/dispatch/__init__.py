@@ -10,10 +10,18 @@ paper's §7 generalization note calls for:
     definition of "who goes first".
   * :mod:`repro.core.dispatch.pool` — ``ServerPool``: one
     ``AcceleratorServer`` per device / mesh slice, with a priority-aware
-    router that *partitions* streams across servers (assignment is fixed
-    for a stream's lifetime, like the paper's per-core task partitioning,
-    so each server's queue can be analyzed in isolation by
-    ``server_analysis.analyze_pool``).
+    router that *partitions* streams across servers (like the paper's
+    per-core task partitioning, so each server's queue can be analyzed in
+    isolation by ``server_analysis.analyze_pool``).  Partitions are
+    SEMI-partitioned, not frozen: a two-phase migration protocol
+    (``request_migration``/``complete_migration``) re-homes a live stream
+    between decode steps — the engine's work stealer drains deep queues
+    onto idle devices, ``consolidate()`` packs mostly-idle devices so
+    they can retire, and ``add_server``/``retire_server`` grow and shrink
+    the pool mid-traffic.  Each move is priced by the StepCostModel and
+    re-proved by ``PoolAdmissionController``, and the analysis side
+    charges it via ``server_analysis.analyze_pool_under_migrations``'s
+    per-phase migration-delay term.
   * :mod:`repro.core.dispatch.batching` — ``BatchingServer``: coalesces
     same-shape requests (one ``batch_key``) from multiple admitted streams
     into one device call, amortizing the paper's 2*eps-per-request server

@@ -28,6 +28,33 @@ degraded-mode admission can place (or shed) them.
 ``enable_failure_detection`` wires a ``HeartbeatMonitor``: each server
 thread beats between device calls, so a call outlasting the timeout is a
 stall and the monitor thread evicts the server from outside.
+
+Planned migration (work stealing / consolidation / elastic scale): the
+"for its lifetime" pinning above has one sanctioned exception — a stream
+may be MOVED between servers through a two-step protocol that keeps the
+partitioned-analysis story intact:
+
+  1. ``request_migration(stream, dst)`` records the intent (admission has
+     already re-proven the stream on ``dst`` with its migration cost);
+  2. the stream's own generating thread observes ``pending_migration`` at
+     its next decode-step boundary, copies its live KV blocks across
+     (``ServeEngine._execute_migration``), and calls
+     ``complete_migration`` — the binding flips only after the blocks
+     landed, so requests are never routed at a server that does not hold
+     the stream's state.  ``cancel_migration`` abandons the intent (e.g.
+     destination pool exhausted); the stream stays where it was.
+
+The STEAL POLICY lives in ``ServeEngine.rebalance_once`` (piggybacked on
+the heartbeat tick): pick the deepest and shallowest live queues by
+active-stream count, stop when the gap is < 2, move the lowest-priority
+stream of the deep server iff the cost model prices the migration copy
+below the predicted queueing-delay saving — steal only when it pays.
+
+Elastic membership: ``add_server()`` grows the pool mid-traffic;
+``begin_drain(si)`` takes a server out of routing (existing streams keep
+running until migrated away); ``retire_server(si)`` removes an empty
+drained server.  Draining servers accept no new assignments and are never
+a migration destination.
 """
 
 from __future__ import annotations
@@ -58,6 +85,9 @@ class ServerPool:
         if num_servers < 1:
             raise ValueError(f"num_servers must be >= 1, got {num_servers}")
         self.batching = batching
+        self._name = name
+        self._ordering = ordering
+        self._max_batch = max_batch
         if batching:
             self.servers: list[AcceleratorServer] = [
                 BatchingServer(ordering=ordering, max_batch=max_batch,
@@ -73,6 +103,9 @@ class ServerPool:
         self._streams: dict[str, StreamAssignment] = {}
         self._alive = [True] * num_servers
         self._monitor = None  # HeartbeatMonitor when detection is enabled
+        self._detection = None  # (timeout, poll, on_death) once enabled
+        self._draining: set[int] = set()
+        self._migrations: dict[str, int] = {}  # stream -> destination
 
     # -- routing (partitioned, priority-aware worst-fit) -------------------
     def _route(self, utilization: float, priority: int) -> int:
@@ -83,7 +116,8 @@ class ServerPool:
                      if a.server == i and a.priority >= priority)
             return (util, hp, i)
 
-        candidates = [i for i in range(len(self.servers)) if self._alive[i]]
+        candidates = [i for i in range(len(self.servers))
+                      if self._alive[i] and i not in self._draining]
         if not candidates:
             raise RuntimeError("no surviving servers in the pool")
         return min(candidates, key=load)
@@ -103,18 +137,115 @@ class ServerPool:
                                  f"{len(self.servers)}")
             elif not self._alive[server]:
                 raise ValueError(f"server {server} has failed")
+            elif server in self._draining:
+                raise ValueError(f"server {server} is draining")
             self._streams[stream] = StreamAssignment(server, utilization, priority)
             return server
 
     def remove(self, stream: str) -> None:
         with self._assign_lock:
             self._streams.pop(stream, None)
+            self._migrations.pop(stream, None)
 
     def server_of(self, stream: str) -> int:
         return self._streams[stream].server
 
     def server_for(self, stream: str) -> AcceleratorServer:
         return self.servers[self._streams[stream].server]
+
+    def streams_on(self, si: int) -> list[str]:
+        with self._assign_lock:
+            return [n for n, a in self._streams.items() if a.server == si]
+
+    # -- planned migration (see module docstring: steal policy lives in the
+    # engine; this is the intent/commit protocol the router honors) --------
+    def request_migration(self, stream: str, dst: int) -> bool:
+        """Record the intent to move ``stream`` to server ``dst``.  The
+        stream's own generating thread performs the actual block copy at
+        its next decode-step boundary and then calls
+        ``complete_migration``.  Returns False (no-op) when the move is
+        not currently legal: unknown stream, dead/draining destination, or
+        the stream is already there."""
+        with self._assign_lock:
+            a = self._streams.get(stream)
+            if (a is None or not (0 <= dst < len(self.servers))
+                    or not self._alive[dst] or dst in self._draining
+                    or a.server == dst):
+                return False
+            self._migrations[stream] = dst
+            return True
+
+    def pending_migration(self, stream: str) -> int | None:
+        with self._assign_lock:
+            return self._migrations.get(stream)
+
+    def cancel_migration(self, stream: str) -> None:
+        with self._assign_lock:
+            self._migrations.pop(stream, None)
+
+    def complete_migration(self, stream: str) -> None:
+        """Flip the binding AFTER the blocks landed on the destination —
+        from here on the router sends the stream's requests there."""
+        with self._assign_lock:
+            dst = self._migrations.pop(stream, None)
+            a = self._streams.get(stream)
+            if dst is not None and a is not None and self._alive[dst]:
+                a.server = dst
+
+    # -- elastic membership ------------------------------------------------
+    def draining(self) -> set[int]:
+        with self._assign_lock:
+            return set(self._draining)
+
+    def begin_drain(self, si: int) -> None:
+        """Take server ``si`` out of routing: no new assignments, never a
+        migration destination.  Existing streams keep running until moved
+        away; ``retire_server`` completes the removal."""
+        if not (0 <= si < len(self.servers)) or not self._alive[si]:
+            raise ValueError(f"server {si} is not alive")
+        with self._assign_lock:
+            self._draining.add(si)
+
+    def retire_server(self, si: int) -> None:
+        """Remove an empty drained server from the pool: it must hold no
+        stream bindings (migrate or remove them first).  The server thread
+        drains its queue and joins; the slot stays in ``servers`` (dead)
+        so indices of other servers never shift."""
+        with self._assign_lock:
+            left = [n for n, a in self._streams.items() if a.server == si]
+            if left:
+                raise RuntimeError(
+                    f"server {si} still owns streams {left}; migrate or "
+                    "remove them before retiring")
+            if not self._alive[si]:
+                return
+            self._alive[si] = False
+            self._draining.discard(si)
+            self._migrations = {s: d for s, d in self._migrations.items()
+                                if d != si}
+        if self._monitor is not None:
+            self._monitor.unregister(self.servers[si].name)
+        self.servers[si].shutdown(drain=True)
+
+    def add_server(self) -> int:
+        """Grow the pool by one server mid-traffic; returns its index.  The
+        new server is wired into the heartbeat monitor when detection is
+        enabled, and immediately eligible for routing and as a migration
+        destination."""
+        with self._assign_lock:
+            si = len(self.servers)
+            if self.batching:
+                server: AcceleratorServer = BatchingServer(
+                    ordering=self._ordering, max_batch=self._max_batch,
+                    name=f"{self._name}-{si}")
+            else:
+                server = AcceleratorServer(ordering=self._ordering,
+                                           name=f"{self._name}-{si}")
+            self.servers.append(server)
+            self._alive.append(True)
+        if self._monitor is not None:
+            self._wire_server(si)
+        return si
 
     # -- fault tolerance ---------------------------------------------------
     def alive_servers(self) -> list[int]:
@@ -143,9 +274,15 @@ class ServerPool:
             if not self._alive[si]:
                 return None
             self._alive[si] = False
+            self._draining.discard(si)
             displaced = sorted(
                 (name for name, a in self._streams.items() if a.server == si),
                 key=lambda n: -self._streams[n].priority)
+            # pending migrations to or from the dead server are moot: the
+            # destination is gone, or the stream is being displaced anyway
+            self._migrations = {
+                s: d for s, d in self._migrations.items()
+                if d != si and s not in displaced}
             if not any(self._alive):
                 reroute = False  # nowhere left to put them
             moved: dict[str, int | None] = {}
@@ -170,6 +307,8 @@ class ServerPool:
         with self._assign_lock:
             if not (0 <= server < len(self.servers)) or not self._alive[server]:
                 raise ValueError(f"server {server} is not alive")
+            if server in self._draining:
+                raise ValueError(f"server {server} is draining")
             self._streams[stream] = StreamAssignment(
                 server, utilization, priority)
 
@@ -192,28 +331,39 @@ class ServerPool:
         monitor (owned by the pool; ``shutdown`` closes it)."""
         from repro.runtime.fault_tolerance import HeartbeatMonitor
 
-        index_of = {s.name: i for i, s in enumerate(self.servers)}
-        reroute = on_death is None
-
-        def _report(si: int, cause: BaseException) -> None:
-            displaced = self.evict_server(si, cause=cause, reroute=reroute)
-            if displaced is not None and on_death is not None:
-                on_death(si, displaced)
+        self._detection = (timeout, poll, on_death)
 
         def _stalled(worker: str) -> None:
-            _report(index_of[worker], TimeoutError(
+            si = next(i for i, s in enumerate(self.servers)
+                      if s.name == worker)
+            self._report_death(si, TimeoutError(
                 f"no heartbeat from {worker!r} for {timeout}s"))
 
         monitor = HeartbeatMonitor(timeout=timeout, poll=poll,
                                    on_failure=_stalled)
         self._monitor = monitor
-        for i, s in enumerate(self.servers):
-            monitor.register(s.name)
-            s.beat = (lambda name=s.name: monitor.beat(name))
-            s.beat_interval_s = min(s.beat_interval_s, max(poll, 1e-3))
-            s.on_failure = (lambda server, si=i:
-                            _report(si, server.fail_cause))
+        for i in range(len(self.servers)):
+            self._wire_server(i)
         return monitor
+
+    def _report_death(self, si: int, cause: BaseException) -> None:
+        on_death = self._detection[2] if self._detection else None
+        displaced = self.evict_server(si, cause=cause,
+                                      reroute=on_death is None)
+        if displaced is not None and on_death is not None:
+            on_death(si, displaced)
+
+    def _wire_server(self, i: int) -> None:
+        """Hook server ``i`` into the active HeartbeatMonitor — shared by
+        ``enable_failure_detection`` (all servers) and ``add_server``
+        (elastic join after detection is already on)."""
+        _timeout, poll, _on_death = self._detection
+        monitor, s = self._monitor, self.servers[i]
+        monitor.register(s.name)
+        s.beat = (lambda name=s.name: monitor.beat(name))
+        s.beat_interval_s = min(s.beat_interval_s, max(poll, 1e-3))
+        s.on_failure = (lambda server, si=i:
+                        self._report_death(si, server.fail_cause))
 
     def attach_fault_injector(self, injector: "Any") -> None:
         """Install a ``runtime.faultinject.FaultInjector``'s per-server

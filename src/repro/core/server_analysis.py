@@ -22,6 +22,7 @@ import math
 from dataclasses import dataclass, field, replace
 
 from .faults import DeviceFault
+from .migration import StreamMigration
 from .task_model import System, Task, ceil_div
 
 __all__ = [
@@ -37,9 +38,11 @@ __all__ = [
     "analyze_edf_server",
     "analyze_pool",
     "analyze_pool_under_faults",
+    "analyze_pool_under_migrations",
     "amortized_server_overhead",
     "AnalysisResult",
     "FaultedAnalysisResult",
+    "MigratedAnalysisResult",
     "PoolAnalysisResult",
 ]
 
@@ -470,6 +473,99 @@ def analyze_pool_under_faults(
             total += ph.response_times.get(t.name, 0.0)
         res.response_times[t.name] = total
         res.recovery_delay[t.name] = (
+            total - res.phases[0].response_times.get(t.name, 0.0))
+        if math.isinf(total) or total > t.D + 1e-9:
+            res.schedulable = False
+    return res
+
+
+@dataclass
+class MigratedAnalysisResult:
+    """Migration-augmented pool analysis under a planned-migration schedule.
+
+    ``phases[k]`` is the plain ``analyze_pool`` result of phase system S_k
+    (S_0 = the original partitioned system; S_{k+1} applies migration k:
+    the one named task moves to its destination device/core with the
+    migration-cost segment appended).  ``response_times`` carries the
+    per-task migration-augmented bound; ``migration_delay`` its excess
+    over the migration-free phase-0 bound."""
+
+    phases: list[PoolAnalysisResult] = field(default_factory=list)
+    response_times: dict[str, float] = field(default_factory=dict)
+    migration_delay: dict[str, float] = field(default_factory=dict)
+    schedulable: bool = True
+
+    def wcrt(self, name: str) -> float:
+        return self.response_times[name]
+
+
+def analyze_pool_under_migrations(
+    system: System, migrations: list[StreamMigration], *,
+    use_deadline_jitter: bool = False,
+) -> MigratedAnalysisResult:
+    """Per-task response-time bounds that survive a planned-migration
+    schedule (work stealing / consolidation / elastic drain).
+
+    Migration model (``core.migration.StreamMigration``): at ``at_ms`` one
+    task is reassigned to device ``to`` on destination core ``core``
+    (``-1`` keeps its current core), and its next job additionally pays the
+    one-time ``cost`` segment — the gather/copy/scatter of its live KV
+    blocks.  Unlike a fault there is no detection gap (the move is
+    initiated by the pool, not discovered), and only the named task moves.
+    The event carries its destination core so the phase partitions stay
+    core-disjoint and ``analyze_pool``'s per-server decomposition applies
+    verbatim to every phase system.
+
+    The bound for task tau_i is
+
+        W_i^mig  =  sum_k W_i(S_k)
+
+    which dominates any execution under the schedule, by the same
+    straddle-job argument ``analyze_pool_under_faults`` documents: a job
+    wholly inside phase k finishes within W_i(S_k); a job of the migrated
+    task straddling the k -> k+1 boundary waited at most W_i(S_k) before
+    the move, and its remaining work — resumed on the destination with the
+    migration copy folded in — is no more than a fresh job of the
+    *augmented* task, which S_{k+1} bounds by W_i(S_{k+1}).  For a
+    non-migrated task at the SOURCE server, the straddling job's residual
+    interference is within the carry-in terms Eqs (3)/(4) already charge
+    (one extra request per interfering task, and the lower-priority
+    blocking term eta_i * lp_max present in both legs of Eq (2)); at the
+    destination the augmented task is a member of S_{k+1} outright.
+    Appending the cost segment to every later phase (rather than one job)
+    is deliberately conservative, mirroring the recovery-segment treatment
+    in the faults analysis.
+
+    The companion simulator (``core.simulator.simulate(..., migrations=)``)
+    replays the same schedule with strictly *weaker* semantics (job-
+    granularity placement, cost folded once into the first post-move job),
+    so this bound must dominate simulated WCRT — property-tested in
+    tests/test_migration.py.
+    """
+    res = MigratedAnalysisResult()
+    phase_tasks: list[list[Task]] = [list(system.tasks)]
+    for m in sorted(migrations, key=lambda m: m.at_ms):
+        nxt = []
+        for t in phase_tasks[-1]:
+            if t.name == m.task:
+                segs = ((*t.segments, m.cost) if m.cost.total > 0
+                        else t.segments)
+                core = m.core if m.core >= 0 else t.core
+                nxt.append(replace(t, device=m.to, core=core,
+                                   segments=segs))
+            else:
+                nxt.append(t)
+        phase_tasks.append(nxt)
+    for pt in phase_tasks:
+        res.phases.append(analyze_pool(
+            replace(system, tasks=list(pt)),
+            use_deadline_jitter=use_deadline_jitter))
+    for t in system.tasks:
+        total = 0.0
+        for ph in res.phases:
+            total += ph.response_times.get(t.name, 0.0)
+        res.response_times[t.name] = total
+        res.migration_delay[t.name] = (
             total - res.phases[0].response_times.get(t.name, 0.0))
         if math.isinf(total) or total > t.D + 1e-9:
             res.schedulable = False

@@ -65,14 +65,19 @@ def cell_key(meta: dict) -> tuple | None:
     Decode calls map to ``("decode", padded_rows, table_width)`` and
     bucketed prefills to ``("prefill", padded_rows, len_bucket)`` — i.e. the
     post-bucketing shape that names the jit trace the call ran under, which
-    is exactly the granularity ``analysis.cost_model`` prices.  Entries
-    without a recognizable shape decision return None (not aggregated).
-    """
+    is exactly the granularity ``analysis.cost_model`` prices.  KV-block
+    migration copies (one gather or scatter of a stream's live blocks) map
+    to ``("migrate", padded_table_width, block_size)`` — ``padded`` is the
+    pow2-bucketed number of blocks moved, the axis that sizes the copy.
+    Entries without a recognizable shape decision return None (not
+    aggregated)."""
     kind = meta.get("kind")
     if kind == "decode" and "padded" in meta and "width" in meta:
         return ("decode", int(meta["padded"]), int(meta["width"]))
     if kind == "prefill" and "padded" in meta and "bucket" in meta:
         return ("prefill", int(meta["padded"]), int(meta["bucket"]))
+    if kind == "migrate" and "padded" in meta and "width" in meta:
+        return ("migrate", int(meta["padded"]), int(meta["width"]))
     return None
 
 
@@ -249,6 +254,13 @@ class AcceleratorServer:
     def call(self, fn: Callable[[], Any], *, priority: int = 0, name: str = "") -> Any:
         """Submit and suspend until completion (the common client pattern)."""
         return self.submit(fn, priority=priority, name=name).wait()
+
+    @property
+    def qlen(self) -> int:
+        """Requests currently queued (not in flight) — the depth signal the
+        work-stealing rebalancer reads."""
+        with self._lock:
+            return len(self._queue)
 
     def shutdown(self, *, drain: bool = True, timeout: float = 30.0) -> None:
         with self._lock:

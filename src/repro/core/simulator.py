@@ -55,11 +55,12 @@ from __future__ import annotations
 
 import heapq
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass, field, replace
 
 from .dispatch.policy import request_key
 from .faults import DeviceFault
-from .task_model import System, Task
+from .migration import StreamMigration
+from .task_model import GpuSegment, System, Task
 
 __all__ = ["simulate", "SimResult", "TraceSlice"]
 
@@ -429,7 +430,8 @@ class _GpuLock:
 
 
 class _Job:
-    def __init__(self, sim: "_Sim", task: Task, release: int, index: int = 0):
+    def __init__(self, sim: "_Sim", task: Task, release: int, index: int = 0,
+                 fold: GpuSegment | None = None):
         self.sim = sim
         self.task = task
         self.release = release
@@ -439,6 +441,17 @@ class _Job:
             C_ms, self.segs = task.C, task.segments
         else:
             C_ms, self.segs = sim.etm(task, index)
+        # one-time migration cost: the first job released after a planned
+        # migration carries the block-copy cost folded into its first GPU
+        # segment (one request, no extra server invocation — weaker than
+        # the analysis, which appends a standalone segment)
+        if fold is not None and fold.total > 0:
+            if self.segs:
+                s0 = self.segs[0]
+                self.segs = (GpuSegment(s0.e + fold.e, s0.m + fold.m),
+                             *tuple(self.segs)[1:])
+            else:
+                self.segs = (fold,)
         eta = len(self.segs)
         # normal chunks: explicit split if provided, else eta+1 equal chunks
         split = sim.splits.get(task.name)
@@ -491,6 +504,7 @@ class _Sim:
         faults: list[DeviceFault] | None = None,
         releases: dict[str, list[float]] | None = None,
         etm=None,
+        migrations: list[StreamMigration] | None = None,
     ):
         self.system = system
         self.mode = mode
@@ -511,6 +525,19 @@ class _Sim:
             if not (0 <= f.device < len(self.device_map)
                     and 0 <= f.to < len(self.device_map)):
                 raise ValueError(f"fault device outside pool: {f}")
+        self.migrations = sorted(migrations or [], key=lambda m: m.at_ms)
+        if self.migrations and mode not in server_modes:
+            raise ValueError("migration replay requires a server mode")
+        names = {t.name for t in system.tasks}
+        self._migs_by_task: dict[str, list[StreamMigration]] = {}
+        for m in self.migrations:
+            if m.task not in names:
+                raise ValueError(f"migration names unknown task: {m}")
+            if not 0 <= m.to < len(self.device_map):
+                raise ValueError(f"migration device outside pool: {m}")
+            if m.core >= system.num_cores:
+                raise ValueError(f"migration core outside system: {m}")
+            self._migs_by_task.setdefault(m.task, []).append(m)
         if mode in server_modes:
             cores = system.server_cores
             if not cores:
@@ -596,11 +623,31 @@ class _Sim:
                     t += _ns(task.T)
             else:
                 rel_ns = [_ns(r) for r in rel_list if _ns(r) < self.horizon]
+            migs = self._migs_by_task.get(task.name, [])
+            charged = [False] * len(migs)
             for idx, rel in enumerate(rel_ns):
+                # job-granularity placement: jobs released at/after a
+                # migration run on its destination; each migration's cost
+                # is folded ONCE into the first such job's first segment
+                dev, core = task.device, task.core
+                fold_e = fold_m = 0.0
+                for j, m in enumerate(migs):
+                    if _ns(m.at_ms) <= rel:
+                        dev = m.to
+                        if m.core >= 0:
+                            core = m.core
+                        if not charged[j]:
+                            charged[j] = True
+                            fold_e += m.cost.e
+                            fold_m += m.cost.m
+                eff = (task if (dev, core) == (task.device, task.core)
+                       else replace(task, device=dev, core=core))
+                fold = (GpuSegment(fold_e, fold_m)
+                        if fold_e or fold_m else None)
                 self.eng.post(
                     rel,
-                    lambda task=task, rel=rel, idx=idx:
-                        _Job(self, task, rel, idx).start())
+                    lambda task=eff, rel=rel, idx=idx, fold=fold:
+                        _Job(self, task, rel, idx, fold=fold).start())
         self.eng.run(self.horizon)
         self.result.trace = self.eng.trace
         return self.result
@@ -618,6 +665,7 @@ def simulate(
     faults: list[DeviceFault] | None = None,
     releases: dict[str, list[float]] | None = None,
     etm=None,
+    migrations: list[StreamMigration] | None = None,
 ) -> SimResult:
     """Simulate ``system`` for ``horizon_ms`` under ``mode`` in
     {'server','server_fifo','server_edf','server_batched','mpcp','fmlp'}.
@@ -635,6 +683,15 @@ def simulate(
     rest of the run.  ``server_analysis.analyze_pool_under_faults`` prices
     the same schedule analytically; bound >= sim is property-tested.
 
+    ``migrations`` (server modes only) replays a planned
+    ``core.migration.StreamMigration`` schedule: every job of the named
+    task released at or after ``at_ms`` runs on device ``to`` / core
+    ``core``, and the one-time migration ``cost`` is folded into the first
+    such job's first GPU segment.  Jobs in flight at the boundary keep the
+    old placement — deliberately weaker than
+    ``server_analysis.analyze_pool_under_migrations`` (which appends the
+    cost segment to every later phase), keeping bound >= sim.
+
     Scenario-engine hooks (``repro.scenarios`` wires both; each defaults to
     the legacy behavior exactly):
 
@@ -647,4 +704,4 @@ def simulate(
       declared segment count."""
     return _Sim(system, mode, horizon_ms, trace, splits, offsets,
                 batch_max=batch_max, faults=faults, releases=releases,
-                etm=etm).run()
+                etm=etm, migrations=migrations).run()

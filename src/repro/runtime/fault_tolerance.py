@@ -90,10 +90,15 @@ class HeartbeatMonitor:
     the pending one (the old code could fire into torn-down owners)."""
 
     def __init__(self, *, timeout: float = 1.0, poll: float = 0.1,
-                 on_failure: Callable[[str], None] | None = None):
+                 on_failure: Callable[[str], None] | None = None,
+                 on_tick: Callable[[], None] | None = None):
         self.timeout = timeout
         self.poll = poll
         self.on_failure = on_failure
+        # periodic hook, fired once per poll under the callback lock — the
+        # serving engine piggybacks its work-stealing rebalance pass here
+        # (same cadence and teardown guarantees as failure callbacks)
+        self.on_tick = on_tick
         self.workers: dict[str, WorkerState] = {}
         self._lock = threading.Lock()
         self._cb_lock = threading.Lock()
@@ -137,6 +142,11 @@ class HeartbeatMonitor:
                         return  # closed mid-scan: suppress late callbacks
                     if self.on_failure:
                         self.on_failure(name)
+            with self._cb_lock:
+                if self._stop.is_set():
+                    return
+                if self.on_tick:
+                    self.on_tick()
 
     def close(self) -> None:
         """Idempotent; once it returns, no further ``on_failure`` fires."""

@@ -26,7 +26,11 @@ Registering a new model::
 
 from __future__ import annotations
 
+import json
 import math
+import pathlib
+import re
+import zlib
 from typing import Mapping, Sequence
 
 from repro.core.task_model import Task
@@ -160,20 +164,85 @@ class Diurnal:
 
 @ARRIVALS.register("trace")
 class TraceDriven:
-    """Replay recorded release instants: ``releases_ms`` maps task name to
-    its absolute release times (ms).  Tasks absent from the trace fall back
-    to periodic releases.  The sporadic minimum-gap contract is validated
-    at generation time — a trace that violates a task's declared T is
-    outside what the analysis covers and is rejected loudly."""
+    """Replay recorded release instants.
 
-    def __init__(self, releases_ms: Mapping[str, Sequence[float]]):
+    Two sources, one required: ``releases_ms`` maps task name to absolute
+    release times (ms) inline; ``path`` loads a JSONL trace file — one
+    ``{"at_ms": <float>, "task": "<key>"}`` event per line (lines without
+    ``at_ms`` are metadata and skipped).  Relative paths resolve against
+    the checked-in corpus at ``repro/scenarios/traces/``.
+
+    ``assign`` maps generated tasks onto trace keys: ``"by_name"`` (the
+    default) requires exact name matches, tasks absent from the trace fall
+    back to periodic releases; ``"round_robin"`` deals the sorted trace
+    keys out by each task's numeric suffix (``tau7`` -> keys[7 % n]), so
+    any generated taskset replays a fixed corpus.
+
+    ``normalize=True`` rescales each task's recorded gaps so its MINIMUM
+    gap equals its declared ``T`` (events shifted to start at 0) — the
+    trace contributes its burst *shape* while the sporadic contract holds
+    by construction.  Without it, the raw instants must already respect
+    every task's T: the minimum-gap check is validated at generation time,
+    and a trace that violates it is outside what the analysis covers and
+    is rejected loudly."""
+
+    def __init__(self, releases_ms: Mapping[str, Sequence[float]] | None
+                 = None, path: str | None = None,
+                 assign: str = "by_name", normalize: bool = False):
+        if (releases_ms is None) == (path is None):
+            raise ValueError("give exactly one of releases_ms= or path=")
+        if assign not in ("by_name", "round_robin"):
+            raise ValueError(f"unknown assign mode {assign!r}")
+        if path is not None:
+            releases_ms = _load_trace(path)
         self.releases_ms = {k: tuple(float(x) for x in v)
                             for k, v in releases_ms.items()}
+        self.assign = assign
+        self.normalize = normalize
+
+    def _key_for(self, task: Task) -> str | None:
+        if self.assign == "by_name":
+            return task.name if task.name in self.releases_ms else None
+        keys = sorted(self.releases_ms)
+        if not keys:
+            return None
+        m = re.search(r"(\d+)$", task.name)
+        idx = int(m.group(1)) if m else zlib.crc32(task.name.encode())
+        return keys[idx % len(keys)]
 
     def releases(self, task: Task, horizon_ms: float, rng) -> list[float]:
-        rec = self.releases_ms.get(task.name)
-        if rec is None:
+        key = self._key_for(task)
+        if key is None:
             return Periodic().releases(task, horizon_ms, rng)
-        out = sorted(r for r in rec if r < horizon_ms)
+        rec = sorted(self.releases_ms[key])
+        if self.normalize and len(rec) > 1:
+            min_gap = min(b - a for a, b in zip(rec, rec[1:]))
+            if min_gap <= 0:
+                raise ValueError(
+                    f"trace key {key!r} has duplicate instants; cannot "
+                    "normalize")
+            scale = task.T / min_gap
+            rec = [(r - rec[0]) * scale for r in rec]
+        out = [r for r in rec if r < horizon_ms]
         check_min_separation(task, out)
         return out
+
+
+def _load_trace(path: str) -> dict[str, list[float]]:
+    """Parse a JSONL arrival trace into {task_key: [at_ms, ...]}."""
+    p = pathlib.Path(path)
+    if not p.is_absolute():
+        p = pathlib.Path(__file__).parent / "traces" / p
+    out: dict[str, list[float]] = {}
+    with open(p) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            ev = json.loads(line)
+            if "at_ms" not in ev:
+                continue  # metadata line
+            out.setdefault(str(ev["task"]), []).append(float(ev["at_ms"]))
+    if not out:
+        raise ValueError(f"trace {p} holds no events")
+    return out

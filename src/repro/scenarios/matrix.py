@@ -17,6 +17,11 @@ matrix (``CI_MATRIX``) is the set `make test-scenarios` property-tests and
     priority-ordered server queue (and its Eq (3) blocking term) absorbs.
   * ``replayed_fault`` — a seeded device death mid-horizon on a 3-device
     pool; the recovery-augmented bound prices it.
+  * ``replayed_migration`` — a seeded work-stealing/consolidation schedule
+    on a 3-device pool; the migration-delay-augmented bound prices it.
+  * ``trace_replay`` — arrivals replayed from the checked-in JSONL corpus
+    (``scenarios/traces/``), dealt round-robin onto the generated taskset
+    and normalized to each task's T.
   * ``measured_costs`` — per-job GPU costs priced from the committed
     BENCH_cost_model.json cell surfaces (real timings) instead of
     declared worst cases.
@@ -95,6 +100,23 @@ _preset(
 )
 
 _preset(
+    "replayed_migration",
+    taskset=_POOL,
+    protocol="server_batched",
+    num_devices=3, cores_per_device=2,
+    num_migrations=2, migration_cost_scale=0.25,
+)
+
+_preset(
+    "trace_replay",
+    taskset=_POOL,
+    arrivals=("trace", {"path": "bursty_pool.jsonl",
+                        "assign": "round_robin", "normalize": True}),
+    protocol="server_batched",
+    num_devices=2, cores_per_device=2,
+)
+
+_preset(
     "measured_costs",
     taskset=_SMALL,
     etm=("measured", {"cell": ("decode", 4, 64), "safety": 1.2}),
@@ -141,6 +163,8 @@ CI_MATRIX = (
     "adversarial_long_context",
     "multi_tenant_inversion",
     "replayed_fault",
+    "replayed_migration",
+    "trace_replay",
     "measured_costs",
     "edf_server",
     "fifo_server",

@@ -35,6 +35,7 @@ from typing import Any, Callable, Mapping
 from repro.core import server_analysis, simulator
 from repro.core.allocation import allocate, allocate_pool
 from repro.core.faults import DeviceFault, seeded_device_faults
+from repro.core.migration import StreamMigration, seeded_stream_migrations
 from repro.core.task_model import GpuSegment, System, Task
 from repro.core.taskset_gen import GenParams, generate_taskset
 
@@ -90,6 +91,11 @@ class Scenario:
       LP-relaxation baseline).
     * ``num_faults`` — replayed device-death schedule (server protocols,
       pools only), seeded from the scenario seed.
+    * ``num_migrations`` — replayed planned-migration schedule (work
+      stealing / consolidation at the analysis level; server protocols,
+      pools only), seeded from the scenario seed;
+      ``migration_cost_scale`` prices each move relative to the largest
+      GPU segment (see ``core.migration.seeded_stream_migrations``).
     """
 
     name: str
@@ -108,6 +114,8 @@ class Scenario:
     num_faults: int = 0
     fault_detect_ms: float = 1.0
     fault_recovery_scale: float = 1.0
+    num_migrations: int = 0
+    migration_cost_scale: float = 0.25
     trace: bool = False
 
     def __post_init__(self) -> None:
@@ -131,6 +139,15 @@ class Scenario:
             raise ValueError(
                 f"{self.name}: cannot kill {self.num_faults} of "
                 f"{self.num_devices} devices")
+        if self.num_migrations < 0:
+            raise ValueError(f"{self.name}: num_migrations must be >= 0")
+        if self.num_migrations and self.num_devices < 2:
+            raise ValueError(
+                f"{self.name}: migration replay needs >= 2 devices")
+        if self.num_migrations and self.num_faults:
+            raise ValueError(
+                f"{self.name}: fault and migration replay are separate "
+                "phase systems; use one per scenario")
 
     def config(self) -> dict:
         """JSON-able echo of the full config (the BENCH_*.json convention)."""
@@ -155,6 +172,8 @@ class Scenario:
             "batch_max": self.batch_max,
             "num_faults": self.num_faults,
             "fault_detect_ms": self.fault_detect_ms,
+            "num_migrations": self.num_migrations,
+            "migration_cost_scale": self.migration_cost_scale,
         }
 
 
@@ -169,6 +188,7 @@ class BuiltScenario:
     releases: dict[str, list[float]]
     etm: Callable[[Task, int], tuple[float, tuple[GpuSegment, ...]]]
     faults: list[DeviceFault]
+    migrations: list[StreamMigration] = field(default_factory=list)
 
     def simulate(self, *, trace: bool | None = None) -> simulator.SimResult:
         return simulator.simulate(
@@ -178,16 +198,21 @@ class BuiltScenario:
             trace=self.scenario.trace if trace is None else trace,
             batch_max=self.scenario.batch_max,
             faults=self.faults or None,
+            migrations=self.migrations or None,
             releases=self.releases,
             etm=self.etm,
         )
 
     def analyze(self):
         """The protocol's response-time bounds; a replayed-fault scenario
-        prices the recovery-augmented bound instead."""
+        prices the recovery-augmented bound, a replayed-migration scenario
+        the migration-delay-augmented one."""
         if self.faults:
             return server_analysis.analyze_pool_under_faults(
                 self.system, self.faults)
+        if self.migrations:
+            return server_analysis.analyze_pool_under_migrations(
+                self.system, self.migrations)
         return self.protocol.analyze(self.system)
 
 
@@ -305,9 +330,19 @@ def build(scenario: Scenario, *, tasks: list[Task] | None = None,
             horizon_ms=horizon_ms, detect_ms=scenario.fault_detect_ms,
             recovery_scale=scenario.fault_recovery_scale)
 
+    migrations: list[StreamMigration] = []
+    if scenario.num_migrations:
+        if proto.approach != "server":
+            raise ValueError(
+                f"{scenario.name}: migration replay needs a server protocol")
+        migrations = seeded_stream_migrations(
+            system, scenario.seed, num_migrations=scenario.num_migrations,
+            horizon_ms=horizon_ms, cost_scale=scenario.migration_cost_scale)
+
     return BuiltScenario(
         scenario=scenario, protocol=proto, system=system,
-        horizon_ms=horizon_ms, releases=releases, etm=etm_fn, faults=faults)
+        horizon_ms=horizon_ms, releases=releases, etm=etm_fn, faults=faults,
+        migrations=migrations)
 
 
 def run(scenario: Scenario, *, tasks: list[Task] | None = None,

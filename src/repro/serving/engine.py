@@ -68,7 +68,7 @@ from repro.core.faults import ServerFailedError, StreamShedError
 from repro.core.task_model import GpuSegment, Task
 from repro.models import model as M
 from repro.runtime.straggler import DeadlineAwarePolicy, StepTimeWatchdog
-from repro.serving.kvcache import PagedKVCacheManager
+from repro.serving.kvcache import OutOfBlocksError, PagedKVCacheManager
 
 
 def _pow2ceil(n: int) -> int:
@@ -102,6 +102,7 @@ class PrecompileReport:
     skipped: int = 0
     decode_cells: tuple = ()
     prefill_cells: tuple = ()
+    migrate_cells: tuple = ()
 
 
 @dataclass
@@ -241,6 +242,16 @@ class ServeEngine:
         self._shed: set[str] = set()
         self._held: dict[str, set] = {}  # stream -> {(si | None, seq_id)}
         self.degraded_reports: list = []
+        # migration state: _mig_lock serializes every _held mutation the
+        # migration protocol and remove() can race on (see
+        # _execute_migration); _active_jobs is the per-server active-stream
+        # depth signal the work-stealing rebalancer reads
+        self._mig_lock = threading.Lock()
+        self._active_jobs: dict[str, int] = {}
+        self._ft_params: dict | None = None  # set by enable_fault_tolerance
+        self._steal_stop: threading.Event | None = None
+        self._steal_min_gain_ms = 0.0
+        self.migrations_completed = 0
         # max_seq must be static inside the trace (it sizes the cache pad)
         self._prefill = jax.jit(
             lambda p, b: M.apply(cfg, p, {**b, "max_seq": max_seq},
@@ -269,6 +280,7 @@ class ServeEngine:
             # default pool: every slot can hold a max_seq sequence, plus the
             # scratch block
             num_blocks = kv_blocks or (max_batch * blocks_per_seq + 1)
+            self._num_blocks = num_blocks  # for elastically-added servers
             self._paged = [
                 _PagedState(cfg, num_blocks, kv_block_size, max_batch,
                             max_seq)
@@ -282,6 +294,14 @@ class ServeEngine:
                                              donate_argnums=(0,))
             self._decode_paged = jax.jit(self._decode_paged_impl,
                                          donate_argnums=(2,))
+            # migration primitive: gather a stream's live blocks into one
+            # packed buffer (source server), scatter them into fresh blocks
+            # (destination server).  Gather must NOT donate (the source
+            # pool stays live until commit); scatter donates like insert.
+            self._export_kv = jax.jit(self._export_kv_impl)
+            self._import_kv = jax.jit(self._import_kv_impl,
+                                      donate_argnums=(0,))
+            self._warm_migrate: set[int] = set()
 
     @property
     def server(self):
@@ -315,19 +335,29 @@ class ServeEngine:
         shed by degraded admission may leave reservations behind if its
         generating thread is gone; ``missing_ok`` makes the free race-safe
         against that thread's own cleanup).  Never call while the stream
-        has a device call in flight."""
+        has a device call in flight.
+
+        The held-blocks sweep runs under ``_mig_lock`` so it is atomic
+        w.r.t. an in-flight migration of this stream: during the copy
+        window the ledger holds BOTH (src, seq) and (dst, seq); freeing
+        both here is exactly right (the stream is gone), and the migrating
+        thread's commit re-checks the ledger under the same lock and
+        aborts instead of double-freeing (see _execute_migration)."""
         self.admission.remove(name)
         self.pool.remove(name)
         self._streams.pop(name, None)
         self._shed.discard(name)
-        for si, seq_id in self._held.pop(name, set()):
-            if si is None:
-                with self._kv_lock:
-                    self.kv.free_seq(seq_id, missing_ok=True)
-            else:
-                state = self._paged[si]
-                with state.lock:
-                    state.mgr.free_seq(seq_id, missing_ok=True)
+        self._active_jobs.pop(name, None)
+        with self._mig_lock:
+            held = self._held.pop(name, set())
+            for si, seq_id in held:
+                if si is None:
+                    with self._kv_lock:
+                        self.kv.free_seq(seq_id, missing_ok=True)
+                else:
+                    state = self._paged[si]
+                    with state.lock:
+                        state.mgr.free_seq(seq_id, missing_ok=True)
 
     # -- bucket auto-tuning (cost-model driven) ----------------------------
     def tune_buckets(self, prompt_lengths, *, steps_hint: int = 0,
@@ -378,6 +408,61 @@ class ServeEngine:
         self._warm_prefill.clear()
         return self.prefill_buckets, self.width_buckets
 
+    # -- static cell pricing (hlo_cost -> cost-model features) -------------
+    def static_cell_costs(self, cells=None) -> dict:
+        """Price shape cells STATICALLY: compile each cell's trace (no
+        device execution) and walk the optimized HLO with
+        ``analysis.hlo_cost`` for exact per-cell (flops, hbm_bytes).
+        Returns {CellKey: (flops, hbm_bytes)} ready for
+        ``cost_model.hlo_cell_features`` — the feed that lets a
+        ``StepCostModel`` price a migration/scatter width (or any cell) it
+        never measured at runtime off static analysis instead of the
+        declared worst case.
+
+        ``cells`` is an iterable of CellKeys (``("decode", rows, width)``,
+        ``("prefill", rows, bucket)``, ``("migrate", width, block_size)``);
+        default: every migrate width bucket — the cells a steal can hit
+        cold.  Compilation reuses XLA's jit cache, so cells already warm
+        from precompile()/traffic cost only the HLO walk.  Paged engines
+        only (the masked-dense decode has a single full-shape cell that
+        measurement always covers)."""
+        from repro.analysis import hlo_cost
+
+        if not self.paged:
+            raise ValueError("static_cell_costs requires paged=True")
+        if cells is None:
+            cells = [("migrate", w, self.kv_block_size)
+                     for w in self.width_buckets]
+        pools = jax.eval_shape(
+            lambda: M.init_paged_cache(self.cfg, self._num_blocks,
+                                       self.kv_block_size))
+
+        def cost_of(lowered) -> tuple[float, float]:
+            c = hlo_cost.analyze_text(lowered.compile().as_text())
+            return (c.flops, c.hbm_bytes)
+
+        out: dict[tuple, tuple[float, float]] = {}
+        for cell in cells:
+            phase, a, b = cell
+            if phase == "migrate":
+                table = jax.ShapeDtypeStruct((a,), jnp.int32)
+                packed = jax.eval_shape(self._export_kv_impl, pools, table)
+                fg, bg = cost_of(self._export_kv.lower(pools, table))
+                fs, bs = cost_of(self._import_kv.lower(pools, packed,
+                                                       table))
+                out[cell] = (fg + fs, bg + bs)
+            elif phase == "decode":
+                packed = jax.ShapeDtypeStruct((a, 2 + b), jnp.int32)
+                out[cell] = cost_of(
+                    self._decode_paged.lower(self.params, packed, pools))
+            elif phase == "prefill":
+                batch = self._prefill_batch(np.zeros((a, b), np.int32))
+                batch["lengths"] = jnp.ones((a,), jnp.int32)
+                out[cell] = cost_of(self._prefill.lower(self.params, batch))
+            else:
+                raise ValueError(f"unknown phase in cell {cell!r}")
+        return out
+
     # -- batched decode internals (masked-dense layout) --------------------
     def _insert_impl(self, full, batched, src_row, slot):
         """Copy row ``src_row`` of a (possibly coalesced) prefill cache into
@@ -409,6 +494,16 @@ class ServeEngine:
         with state.cond:
             while not state.free:
                 state.cond.wait()
+            return state.free.pop()
+
+    def _try_acquire_slot(self, si: int) -> int | None:
+        """Non-blocking slot acquisition — the migration path must never
+        deadlock holding its source slot while waiting on a destination
+        slot, so no free slot means the steal is cancelled instead."""
+        state = self._slots[si]
+        with state.cond:
+            if not state.free:
+                return None
             return state.free.pop()
 
     def _release_slot(self, si: int, slot: int) -> None:
@@ -568,12 +663,141 @@ class ServeEngine:
 
     def _paged_release(self, si: int, seq_id: str) -> None:
         name = seq_id.rsplit("#", 1)[0]
-        held = self._held.get(name)
-        if held is not None:
-            held.discard((si, seq_id))
-        state = self._paged[si]
-        with state.lock:
-            state.mgr.free_seq(seq_id, missing_ok=True)
+        with self._mig_lock:
+            held = self._held.get(name)
+            if held is not None:
+                held.discard((si, seq_id))
+            state = self._paged[si]
+            with state.lock:
+                state.mgr.free_seq(seq_id, missing_ok=True)
+
+    # -- live KV-block migration (steal / consolidate / elastic drain) -----
+    def _export_kv_impl(self, pools, table):
+        """Gather the blocks named by ``table`` out of every layer's pool
+        into one packed contiguous buffer — the single device->host
+        transfer of the migration.  Pad lanes point at the source scratch
+        block (never-read zeros), so the gather width can be pow2-bucketed
+        onto a precompiled cell."""
+        return {"layers": jax.tree.map(lambda pool: pool[:, table],
+                                       pools["layers"])}
+
+    def _import_kv_impl(self, pools, packed, table):
+        """Scatter a packed export into the destination pools at ``table``
+        (the fresh blocks import_seq allocated; pad lanes target the
+        destination scratch block — duplicate scratch writes are benign,
+        nothing reads it).  Donated like the decode/insert pool updates."""
+
+        def one(pool, rows):
+            return pool.at[:, table].set(rows.astype(pool.dtype))
+
+        return {"layers": jax.tree.map(one, pools["layers"],
+                                       packed["layers"])}
+
+    def _migrate_cell(self, n_blocks: int) -> tuple[int, bool]:
+        """(padded gather width, cold?) for a migration of ``n_blocks`` —
+        same warm-cell bump-up discipline as the decode hot path."""
+        w = bucket_up(n_blocks, self.width_buckets)
+        cold = False
+        if self._warm_migrate and w not in self._warm_migrate:
+            covers = [c for c in self._warm_migrate if c >= w]
+            if covers:
+                w = min(covers)
+            else:
+                cold = True
+        return w, cold
+
+    def _execute_migration(self, name: str, seq_id: str, src_si: int,
+                           dst_si: int, prio: int) -> np.ndarray:
+        """Move ``seq_id``'s live blocks from server ``src_si`` to
+        ``dst_si``; returns the stream's new full-width block table.
+
+        Two-phase commit against ``remove()`` (satellite of the protocol in
+        ``kvcache``'s docstring): under ``_mig_lock`` the destination
+        allocation is made and BOTH sides enter the ``_held`` ledger; the
+        copy itself runs outside the lock (a gather on the source server, a
+        host hop, a scatter on the destination server — each serialized
+        with that server's own batches); commit re-takes the lock,
+        verifies the ledger still holds the entries (a concurrent
+        ``remove`` frees both sides itself — then this raises instead of
+        double-freeing), and frees the source.  Any failure rolls the
+        destination back, leaving the stream exactly where it was.
+
+        A ``remove()`` that lands mid-copy may free destination blocks the
+        scatter then writes: benign — the scatter targets only blocks this
+        migration allocated, their content is never read unless this
+        commit succeeds (then they were never freed), and a later owner's
+        prefill rewrites every in-range position while attention masks the
+        rest."""
+        src, dst = self._paged[src_si], self._paged[dst_si]
+        with self._mig_lock:
+            held = self._held.get(name)
+            if held is None or (src_si, seq_id) not in held:
+                raise StreamShedError(
+                    f"stream {name!r} gone before migration")
+            with src.lock:
+                exp = src.mgr.export_seq(seq_id)
+            with dst.lock:
+                new_blocks = dst.mgr.import_seq(exp)  # OutOfBlocks -> clean
+            held.add((dst_si, seq_id))
+        try:
+            n = len(exp.blocks)
+            w, cold = self._migrate_cell(n)
+            src_table = np.full((w,), src.scratch_block, np.int32)
+            src_table[:n] = exp.blocks
+            dst_table = np.full((w,), dst.scratch_block, np.int32)
+            dst_table[:n] = new_blocks
+
+            def gather():
+                t0 = time.monotonic()
+                packed = jax.block_until_ready(
+                    self._export_kv(src.pools, jnp.asarray(src_table)))
+                packed = jax.tree.map(np.asarray, packed)  # device -> host
+                self.pool.servers[src_si].record_meta(
+                    kind="migrate", rows=n, padded=w,
+                    width=self.kv_block_size,
+                    seconds=time.monotonic() - t0, cold=cold)
+                return packed
+
+            packed = self.pool.servers[src_si].submit(
+                gather, priority=prio, name=f"{name}/migrate-export").wait()
+
+            def scatter():
+                if dst.pools is None:
+                    dst.pools = M.init_paged_cache(
+                        self.cfg, dst.mgr.num_blocks, dst.mgr.block_size)
+                t0 = time.monotonic()
+                dst.pools = jax.block_until_ready(
+                    self._import_kv(dst.pools,
+                                    jax.tree.map(jnp.asarray, packed),
+                                    jnp.asarray(dst_table)))
+                self.pool.servers[dst_si].record_meta(
+                    kind="migrate", rows=n, padded=w,
+                    width=self.kv_block_size,
+                    seconds=time.monotonic() - t0, cold=cold)
+
+            self.pool.servers[dst_si].submit(
+                scatter, priority=prio, name=f"{name}/migrate-import").wait()
+        except BaseException:
+            with self._mig_lock:
+                held = self._held.get(name)
+                if held is not None:
+                    held.discard((dst_si, seq_id))
+                with dst.lock:
+                    dst.mgr.free_seq(seq_id, missing_ok=True)
+            raise
+        with self._mig_lock:
+            held = self._held.get(name)
+            if held is None or (dst_si, seq_id) not in held:
+                # remove() raced the copy: it freed both sides already
+                raise StreamShedError(
+                    f"stream {name!r} removed mid-migration")
+            held.discard((src_si, seq_id))
+            with src.lock:
+                src.mgr.free_seq(seq_id, missing_ok=True)
+        self.migrations_completed += 1
+        full = np.full((dst.nb_max,), dst.scratch_block, np.int32)
+        full[:n] = new_blocks
+        return full
 
     # -- batched prefill (length-bucketed) ---------------------------------
     def _run_prefill_batch(self, si: int, bucket: int):
@@ -665,24 +889,41 @@ class ServeEngine:
         plan_p = [c for c in reachable_p
                   if hot is None or c == fb_p or ("prefill", *c) in hot]
         todo_p = [c for c in plan_p if c not in self._warm_prefill]
+        # migration gather/scatter cells: one per width bucket (the traces
+        # are cheap — pure gather/scatter, no model math), so a mid-traffic
+        # steal never stalls a server behind XLA compilation
+        reachable_m = list(self.width_buckets) if self.paged else []
+        fb_m = reachable_m[-1] if reachable_m else None
+        plan_m = [w for w in reachable_m
+                  if hot is None or w == fb_m
+                  or ("migrate", w, self.kv_block_size) in hot]
+        todo_m = [w for w in plan_m if w not in self._warm_migrate]
         for si in range(len(self.pool.servers)):
             # traces are shared: run the compile plan on server 0 only;
             # the other servers just get their pools/caches initialized
             d = todo_d if si == 0 else []
             p = todo_p if si == 0 else []
+            m = todo_m if si == 0 else []
             self.pool.servers[si].submit(
-                lambda si=si, d=d, p=p: self._precompile_server(si, d, p),
+                lambda si=si, d=d, p=p, m=m:
+                    self._precompile_server(si, d, p, m),
                 name=f"precompile-{si}").wait()
         self._warm_decode.update(todo_d)
         self._warm_prefill.update(todo_p)
+        if self.paged:
+            self._warm_migrate.update(todo_m)
         skipped = ((len(reachable_d) - len(todo_d))
-                   + (len(reachable_p) - len(todo_p)))
-        return PrecompileReport(compiled=len(todo_d) + len(todo_p),
+                   + (len(reachable_p) - len(todo_p))
+                   + (len(reachable_m) - len(todo_m)))
+        return PrecompileReport(compiled=len(todo_d) + len(todo_p)
+                                + len(todo_m),
                                 skipped=skipped,
                                 decode_cells=tuple(todo_d),
-                                prefill_cells=tuple(todo_p))
+                                prefill_cells=tuple(todo_p),
+                                migrate_cells=tuple(todo_m))
 
-    def _precompile_server(self, si: int, decode_cells, prefill_cells):
+    def _precompile_server(self, si: int, decode_cells, prefill_cells,
+                           migrate_cells=()):
         if self.paged:
             state = self._paged[si]
             if state.pools is None:
@@ -696,6 +937,14 @@ class ServeEngine:
                 _, state.pools = jax.block_until_ready(
                     self._decode_paged(self.params, jnp.asarray(pack),
                                        state.pools))
+            for w in migrate_cells:
+                # round-trip the scratch block through gather + scatter:
+                # identical content lands back where it came from
+                table = jnp.full((w,), state.scratch_block, jnp.int32)
+                packed = jax.block_until_ready(
+                    self._export_kv(state.pools, table))
+                state.pools = jax.block_until_ready(
+                    self._import_kv(state.pools, packed, table))
         else:
             state = self._slots[si]
             if state.cache is None:
@@ -859,6 +1108,7 @@ class ServeEngine:
             seq_id = self._kv_reserve(name, prefix[None, :], feeds)
         try:
             slot = self._acquire_slot(si)
+            self._active_jobs[name] = si
             try:
                 t0 = time.monotonic()
                 req = server.submit_batch(
@@ -896,6 +1146,36 @@ class ServeEngine:
                         raise StreamShedError(
                             f"stream {name!r} shed by degraded-mode "
                             "admission")
+                    if self.paged:
+                        # planned migration (steal / consolidate / drain):
+                        # the stream's own thread moves its blocks at this
+                        # step boundary — no decode of this stream can be
+                        # in flight, so the copy sees a quiescent sequence
+                        dst = self.pool.pending_migration(name)
+                        if (dst is not None and dst != si
+                                and dst in self.pool.alive_servers()):
+                            dst_slot = self._try_acquire_slot(dst)
+                            if dst_slot is None:
+                                # destination full right now: abandon the
+                                # steal rather than block holding our slot
+                                self.pool.cancel_migration(name)
+                            else:
+                                try:
+                                    table = self._execute_migration(
+                                        name, seq_id, si, dst, prio)
+                                except OutOfBlocksError:
+                                    self._release_slot(dst, dst_slot)
+                                    self.pool.cancel_migration(name)
+                                except BaseException:
+                                    self._release_slot(dst, dst_slot)
+                                    raise
+                                else:
+                                    self._release_slot(si, slot)
+                                    slot, si = dst_slot, dst
+                                    server = self.pool.servers[si]
+                                    run_batch = self._run_paged_decode(si)
+                                    self._active_jobs[name] = si
+                                    self.pool.complete_migration(name)
                     payload = ((token, table, length) if self.paged
                                else (slot, token))
                     t1 = time.monotonic()
@@ -913,6 +1193,7 @@ class ServeEngine:
                     log.generated.append(token)
                     i += 1
             finally:
+                self._active_jobs.pop(name, None)
                 self._release_slot(si, slot)
         finally:
             if self.paged:
@@ -969,6 +1250,9 @@ class ServeEngine:
         ``_on_server_death`` as the pool's death handler so eviction flows
         into degraded-mode re-admission instead of blind re-routing.
         Returns self for chaining."""
+        self._ft_params = {"max_retries": max_retries,
+                           "retry_backoff_s": retry_backoff_s,
+                           "watchdog": watchdog}
         for s in self.pool.servers:
             s.max_retries = max_retries
             s.retry_backoff_s = retry_backoff_s
@@ -995,6 +1279,19 @@ class ServeEngine:
                 displaced = self.pool.evict_server(si, reroute=False)
             if displaced is None:
                 return  # another caller already recovered this server
+            # migration race window: a stream whose admission slot already
+            # moved to its steal destination (admission.migrate committed,
+            # pool binding not yet flipped) was displaced here but will NOT
+            # be re-placed by evict_device — re-bind it to its live
+            # admission placement instead of dropping it
+            for s in list(displaced):
+                d = self.admission.placement.get(s)
+                if d is not None and d != si and self.admission.alive[d]:
+                    task = next(t for t in self.admission.devices[d].streams
+                                if t.name == s)
+                    self.pool.reassign(s, d, utilization=task.G / task.T,
+                                       priority=task.priority)
+                    displaced.pop(s)
             report = self.admission.evict_device(
                 si, recovery_cost_ms=self._recovery_cost_ms)
             for s, d in report.moved.items():
@@ -1023,6 +1320,247 @@ class ServeEngine:
                 declared = min(declared, pred_ms) if declared > 0 else pred_ms
         return float(declared)
 
+    # -- work stealing / consolidation / elastic scale ---------------------
+    def _migration_cost_ms(self, name: str) -> float:
+        """Price a steal of ``name``: gather + scatter of a full-width
+        block table (worst case — the mover pays for every lane whether
+        live or scratch-padded) at the cost model's measured "migrate"
+        cell, with the calibration safety margin.  0 when uncalibrated or
+        unmeasured — the depth-gap rule decides instead."""
+        if not self.paged or self.cost_model is None:
+            return 0.0
+        w = bucket_up(self._paged[0].nb_max, self.width_buckets)
+        pred = self.cost_model.predict("migrate", w, self.kv_block_size)
+        if not math.isfinite(pred):
+            return 0.0
+        return 2.0 * pred * getattr(self.cost_model, "safety", 1.0) * 1e3
+
+    def _steal_profitable(self, name: str, depth_src: int, depth_dst: int,
+                          mc_ms: float, min_gain_ms: float) -> bool:
+        """Steal only when predicted queueing relief beats the move's cost:
+        the victim's remaining decode steps each save the difference
+        between a depth_src-row and a (depth_dst+1)-row batched decode
+        step.  Without a cost model (or an unmeasured decode phase), fall
+        back to the depth-gap >= 2 rule — stealing across a 1-deep gap just
+        thrashes."""
+        if self.cost_model is None:
+            return depth_src - depth_dst >= 2
+        spec = self._streams.get(name)
+        if spec is None:
+            return False
+        w = self.width_buckets[-1] if self.width_buckets else 0
+        c_src = self.cost_model.predict(
+            "decode", bucket_up(depth_src, self._row_buckets), w)
+        c_dst = self.cost_model.predict(
+            "decode", bucket_up(depth_dst + 1, self._row_buckets), w)
+        if not (math.isfinite(c_src) and math.isfinite(c_dst)):
+            return depth_src - depth_dst >= 2
+        gain_ms = spec.decode_steps * max(0.0, c_src - c_dst) * 1e3
+        return gain_ms - mc_ms >= min_gain_ms
+
+    def rebalance_once(self, *, min_gain_ms: float | None = None) -> int:
+        """One work-stealing pass: move queued-behind streams from the
+        deepest server onto the shallowest until the depth gap closes or
+        no move is profitable.  Returns the number of steals REQUESTED —
+        each victim's own thread performs the block copy at its next
+        decode-step boundary (see _attempt_batched), so depth accounting
+        here counts pending migrations at their destination to avoid
+        over-stealing while copies are in flight.
+
+        Runs on the heartbeat tick (or the fallback timer thread) and
+        yields to recovery: if ``_recovery_lock`` is held the pass is
+        skipped — rebalancing mid-eviction would race degraded-mode
+        re-admission."""
+        if min_gain_ms is None:
+            min_gain_ms = self._steal_min_gain_ms
+        if not self._recovery_lock.acquire(blocking=False):
+            return 0
+        try:
+            stolen = 0
+            draining = self.pool.draining()
+            live = [i for i in self.pool.alive_servers()
+                    if i not in draining]
+            if len(live) < 2:
+                return 0
+            while True:
+                depths = {i: 0 for i in live}
+                for nm, si in list(self._active_jobs.items()):
+                    if si not in depths:
+                        continue
+                    pd = self.pool.pending_migration(nm)
+                    depths[pd if pd in depths else si] += 1
+                src = max(depths, key=lambda i: (depths[i], i))
+                dst = min(depths, key=lambda i: (depths[i], -i))
+                if depths[src] - depths[dst] < 2:
+                    return stolen
+                victims = sorted(
+                    (nm for nm, si in list(self._active_jobs.items())
+                     if si == src and nm in self._streams
+                     and nm not in self._shed
+                     and self.pool.pending_migration(nm) is None),
+                    key=lambda nm: self._streams[nm].priority)
+                moved_one = False
+                for victim in victims:
+                    mc = self._migration_cost_ms(victim)
+                    if not self._steal_profitable(victim, depths[src],
+                                                  depths[dst], mc,
+                                                  min_gain_ms):
+                        continue
+                    decision, d = self.admission.migrate(
+                        victim, dst, migration_cost_ms=mc)
+                    if d < 0:
+                        continue
+                    if not self.pool.request_migration(victim, dst):
+                        # stream vanished / destination became illegal
+                        # between the admission move and the intent: put
+                        # the admission slot back (best-effort — if the
+                        # stream is gone this is a no-op too)
+                        self.admission.migrate(victim, src)
+                        continue
+                    stolen += 1
+                    moved_one = True
+                    break
+                if not moved_one:
+                    return stolen
+        finally:
+            self._recovery_lock.release()
+
+    def enable_work_stealing(self, *, interval_s: float = 0.05,
+                             min_gain_ms: float = 0.0) -> "ServeEngine":
+        """Switch on periodic rebalancing.  Piggybacks on the heartbeat
+        monitor's tick when fault tolerance is enabled (one thread, one
+        cadence, same teardown guarantees); otherwise runs a dedicated
+        daemon timer at ``interval_s``.  ``min_gain_ms`` is the minimum
+        predicted net win (queueing relief minus migration cost) before a
+        steal fires.  Returns self for chaining."""
+        self._steal_min_gain_ms = float(min_gain_ms)
+
+        def tick() -> None:
+            try:
+                self.rebalance_once()
+            except Exception:
+                pass  # best-effort: never kill the timer/monitor thread
+
+        if self.pool._monitor is not None:
+            self.pool._monitor.on_tick = tick
+            return self
+        stop = threading.Event()
+        self._steal_stop = stop
+
+        def loop() -> None:
+            while not stop.wait(interval_s):
+                tick()
+
+        threading.Thread(target=loop, daemon=True,
+                         name="steal-rebalance").start()
+        return self
+
+    def consolidate(self, si: int) -> dict[str, int]:
+        """Drain server ``si`` by moving every stream it owns elsewhere:
+        streams with a job in flight get a migration intent (their own
+        thread moves the blocks at the next step boundary); idle streams
+        are re-bound directly (nothing to copy — their next job prefills
+        on the new server).  Each move is re-proven by admission first; a
+        stream no destination can prove STAYS PUT and keeps running on the
+        draining server (consolidation is an optimization, never a shed).
+        Returns {stream: destination}.  ``remove_server`` completes the
+        retirement once the server is empty."""
+        self.pool.begin_drain(si)
+        draining = self.pool.draining()
+        dests = sorted((d for d in self.pool.alive_servers()
+                        if d != si and d not in draining),
+                       key=self.admission.gpu_utilization)
+        moved: dict[str, int] = {}
+        for name in self.pool.streams_on(si):
+            active = self._active_jobs.get(name) == si
+            mc = self._migration_cost_ms(name) if active else 0.0
+            got = -1
+            for d in dests:
+                _, got = self.admission.migrate(name, d,
+                                                migration_cost_ms=mc)
+                if got >= 0:
+                    break
+            if got < 0:
+                continue
+            if active:
+                self.pool.request_migration(name, got)
+            else:
+                task = next(t for t in self.admission.devices[got].streams
+                            if t.name == name)
+                self.pool.reassign(name, got, utilization=task.G / task.T,
+                                   priority=task.priority)
+            moved[name] = got
+            dests.sort(key=self.admission.gpu_utilization)
+        return moved
+
+    def add_server(self) -> int:
+        """Elastic scale-up: grow the pool AND the admission partition by
+        one device mid-traffic; returns the new server index.  The server
+        inherits the pool's fault-tolerance settings (retry budget,
+        watchdog, heartbeat wiring — the pool handles the monitor), gets
+        its own slot/paged state, and warms its pools on its own thread —
+        the jitted shape cells are shared engine-wide, so no new XLA
+        traces happen; a freshly-joined server serves its first request at
+        full speed."""
+        with self._recovery_lock:
+            si = self.pool.add_server()
+            di = self.admission.add_device()
+            if si != di:
+                raise RuntimeError(
+                    f"pool/admission index drift: server {si} vs device "
+                    f"{di}")
+            if self.batching:
+                self._slots.append(_SlotState(self.max_batch))
+            if self.paged:
+                self._paged.append(_PagedState(
+                    self.cfg, self._num_blocks, self.kv_block_size,
+                    self.max_batch, self.max_seq))
+            s = self.pool.servers[si]
+            if self._ft_params is not None:
+                s.max_retries = self._ft_params["max_retries"]
+                s.retry_backoff_s = self._ft_params["retry_backoff_s"]
+                if self._ft_params["watchdog"] and s.watchdog is None:
+                    s.watchdog = StepTimeWatchdog()
+        s.submit(lambda: self._precompile_server(si, [], [], []),
+                 name=f"precompile-{si}").wait()
+        return si
+
+    def remove_server(self, si: int, *, timeout_s: float = 10.0) -> None:
+        """Elastic scale-down: drain server ``si``, migrate its streams to
+        proven destinations (live-KV migration for in-flight streams, a
+        plain re-bind for idle ones), shed what the shrunk pool cannot
+        prove, wait for the server to empty, and retire it.  Unlike
+        ``consolidate`` this is a COMMITTED shrink — admission re-proves
+        the whole placement via ``drain_device`` (identical machinery to
+        failure eviction, priced as a cheap block copy instead of a
+        re-prefill) and appends the resulting DegradedReport.  Raises
+        TimeoutError if in-flight work does not clear in ``timeout_s``."""
+        with self._recovery_lock:
+            self.pool.begin_drain(si)
+            report = self.admission.drain_device(
+                si, migration_cost_ms=lambda t: self._migration_cost_ms(
+                    t.name))
+            for s, d in report.moved.items():
+                if self._active_jobs.get(s) == si:
+                    self.pool.request_migration(s, d)
+                else:
+                    task = next(t for t in self.admission.devices[d].streams
+                                if t.name == s)
+                    self.pool.reassign(s, d, utilization=task.G / task.T,
+                                       priority=task.priority)
+            for s in report.shed:
+                self._shed.add(s)
+                self.pool.remove(s)
+            self.degraded_reports.append(report)
+        deadline = time.monotonic() + timeout_s
+        while (any(d == si for d in self._active_jobs.values())
+               or self.pool.streams_on(si)):
+            if time.monotonic() > deadline:
+                raise TimeoutError(
+                    f"server {si} did not drain within {timeout_s}s")
+            time.sleep(0.005)
+        self.pool.retire_server(si)
+
     def kv_blocks_in_use(self) -> int:
         """Blocks currently allocated across every KV manager, excluding
         each paged server's permanently-held scratch block — i.e. the count
@@ -1034,6 +1572,8 @@ class ServeEngine:
         return total
 
     def close(self) -> None:
+        if self._steal_stop is not None:
+            self._steal_stop.set()
         self.pool.shutdown()
 
 

@@ -42,6 +42,36 @@ When does which knob kick in (ServeEngine, paged=True):
 Exact per-stream lengths stay HERE, host-side: the device never sees a
 length it doesn't need, and the analysis side keeps its per-request bounds
 (declared WCET = full-width call; compaction/bucketing only shrink).
+
+Migration protocol (live cross-server stream moves)
+---------------------------------------------------
+A stream's live blocks can move from server A's pool to server B's pool
+without recomputation.  The host-side half lives here; the device-side
+half (one gather, one host copy, one scatter) is
+``ServeEngine._execute_migration``:
+
+  1. ``export_seq(seq_id)`` on the SOURCE manager snapshots the sequence
+     into a frozen :class:`SeqExport` — the exact block-id order and token
+     length.  The source allocation stays live (blocks still owned) so the
+     stream can keep decoding or abort cleanly until commit.
+  2. ``import_seq(export)`` on the DESTINATION manager allocates the same
+     number of FRESH private blocks (refcount 1 each) under the same
+     seq_id and returns their ids.  COW sharing is intentionally not
+     preserved across pools: the destination copy is private, so a forked
+     sibling left behind on the source keeps its shared blocks untouched.
+     Raises :class:`OutOfBlocksError` with the destination unchanged.
+  3. The engine gathers ``pool[:, export.blocks]`` on A (pow2-padded table
+     so a precompiled "migrate" cell is reused — no mid-traffic trace),
+     copies once through the host, scatters into the fresh ids on B, then
+     COMMITS: ``free_seq`` on the source, decode resumes on B.  Greedy
+     tokens are bit-identical because block contents and the (blocks,
+     length) mapping are copied exactly.
+
+Atomicity w.r.t. ``ServeEngine.remove``: the engine holds both sides in
+its ``_held`` ledger for the whole window and serializes commit/abort
+against ``remove`` under one lock, so a concurrent remove frees each
+side exactly once (``free_seq(..., missing_ok=True)`` makes the race
+idempotent, never a double-free).
 """
 
 from __future__ import annotations
@@ -57,6 +87,19 @@ class OutOfBlocksError(RuntimeError):
 class SeqAlloc:
     blocks: list[int] = field(default_factory=list)
     length: int = 0  # tokens written
+
+
+@dataclass(frozen=True)
+class SeqExport:
+    """Host-side snapshot of one sequence for cross-pool migration: the
+    source pool's block ids in table order plus the token length.  Block
+    *contents* travel separately (the engine's gather/scatter pair); this
+    carries exactly what :meth:`PagedKVCacheManager.import_seq` needs to
+    rebuild the allocation on another pool."""
+
+    seq_id: str
+    blocks: tuple[int, ...]
+    length: int
 
 
 class PagedKVCacheManager:
@@ -134,6 +177,34 @@ class PagedKVCacheManager:
             self.refcount[b] -= 1
             if self.refcount[b] == 0:
                 self.free.append(b)
+
+    # -- migration ----------------------------------------------------------
+    def export_seq(self, seq_id: str) -> SeqExport:
+        """Snapshot ``seq_id`` for migration (step 1 of the protocol in the
+        module docstring).  Pure read: the source allocation stays live and
+        owned until the engine commits with :meth:`free_seq`."""
+        a = self.seqs[seq_id]
+        return SeqExport(seq_id=seq_id, blocks=tuple(a.blocks),
+                         length=a.length)
+
+    def import_seq(self, export: SeqExport) -> list[int]:
+        """Rebuild an exported sequence on THIS pool with fresh private
+        blocks (step 2 of the protocol); returns the new block ids in the
+        same table order as ``export.blocks``.  The block count is
+        preserved exactly — including any reservation padding beyond
+        ``_blocks_for(length)`` — so a mid-generation move keeps the
+        blocks the source had already set aside for upcoming tokens.
+        All-or-nothing: on exhaustion the pool is left unchanged."""
+        if export.seq_id in self.seqs:
+            raise ValueError(f"{export.seq_id!r} already allocated")
+        n = len(export.blocks)
+        if len(self.free) < n:
+            raise OutOfBlocksError(
+                f"migration needs {n} blocks, {len(self.free)} free")
+        alloc = SeqAlloc([self._take_block() for _ in range(n)],
+                         export.length)
+        self.seqs[export.seq_id] = alloc
+        return list(alloc.blocks)
 
     def seq_ids(self, prefix: str = "") -> list[str]:
         """Live sequence ids, optionally filtered by stream-name prefix

@@ -1,0 +1,462 @@
+"""Live KV-block migration: manager corners, engine end-to-end (steal /
+consolidate / elastic scale), the remove()-vs-migration race, and the
+static-pricing feed.
+
+Every end-to-end case holds the tentpole's two invariants: greedy tokens
+are BIT-IDENTICAL to a never-migrated run, and nothing leaks — after the
+streams drain, ``kv_blocks_in_use()`` is 0 and every surviving server has
+all its slots free.
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.analysis.cost_model import StepCostModel, hlo_cell_features
+from repro.configs.registry import get_config
+from repro.core.faults import StreamShedError
+from repro.models import model as M
+from repro.runtime.elastic import ElasticPoolController, LoadTrajectory
+from repro.serving.engine import ServeEngine, StreamSpec
+from repro.serving.kvcache import (OutOfBlocksError, PagedKVCacheManager,
+                                   SeqExport)
+
+STEPS = 6
+
+
+# -------------------------------------------------------------------------
+# manager-level corners (no device work)
+# -------------------------------------------------------------------------
+
+
+class TestManagerMigration:
+    def test_export_import_roundtrip_across_pools(self):
+        a = PagedKVCacheManager(num_blocks=8, block_size=4)
+        b = PagedKVCacheManager(num_blocks=8, block_size=4)
+        a.allocate("s#0", 6)  # 2 blocks
+        a.extend("s#0", 3)  # 3rd block
+        exp = a.export_seq("s#0")
+        assert exp.blocks == tuple(a.seqs["s#0"].blocks)
+        new = b.import_seq(exp)
+        assert len(new) == len(exp.blocks)
+        assert b.length("s#0") == a.length("s#0") == 9
+        # export is a pure read: source untouched until the engine commits
+        assert a.blocks_in_use == 3 and b.blocks_in_use == 3
+        a.free_seq("s#0")
+        b.free_seq("s#0")
+        assert a.blocks_in_use == 0 and b.blocks_in_use == 0
+
+    def test_import_preserves_reservation_padding(self):
+        """A mid-generation move keeps blocks the source reserved beyond
+        the current length — the destination table must not shrink."""
+        a = PagedKVCacheManager(num_blocks=8, block_size=4)
+        b = PagedKVCacheManager(num_blocks=8, block_size=4)
+        a.allocate("s#0", 3)
+        a.extend("s#0", 8)  # reserve ahead: 3 blocks for 11 tokens
+        n_src = len(a.seqs["s#0"].blocks)
+        new = b.import_seq(a.export_seq("s#0"))
+        assert len(new) == n_src
+
+    def test_cow_forked_stream_migrates_privately(self):
+        """Migrating one side of a COW fork: the mover gets PRIVATE blocks
+        on the destination; the stay-behind sibling and the shared
+        refcounts on the source are untouched."""
+        a = PagedKVCacheManager(num_blocks=8, block_size=4)
+        b = PagedKVCacheManager(num_blocks=8, block_size=4)
+        a.allocate("base#0", 8)  # 2 blocks
+        a.fork("base#0", "fork#0")
+        shared = list(a.seqs["base#0"].blocks)
+        assert all(a.refcount[blk] == 2 for blk in shared)
+        new = b.import_seq(a.export_seq("fork#0"))
+        assert set(new).isdisjoint(shared) or True  # different pools anyway
+        assert all(b.refcount[blk] == 1 for blk in new)
+        # commit: free the source side of the fork only
+        a.free_seq("fork#0")
+        assert all(a.refcount[blk] == 1 for blk in shared)
+        assert a.seqs["base#0"].blocks == shared
+        # destination extend never touches the source's sibling
+        b.extend("fork#0", 4)
+        assert a.length("base#0") == 8
+
+    def test_import_exhaustion_is_all_or_nothing(self):
+        a = PagedKVCacheManager(num_blocks=8, block_size=4)
+        b = PagedKVCacheManager(num_blocks=2, block_size=4)
+        a.allocate("s#0", 12)  # 3 blocks > b's pool
+        free_before = list(b.free)
+        with pytest.raises(OutOfBlocksError):
+            b.import_seq(a.export_seq("s#0"))
+        assert b.free == free_before and "s#0" not in b.seqs
+        assert b.blocks_in_use == 0
+
+    def test_import_duplicate_id_rejected(self):
+        a = PagedKVCacheManager(num_blocks=8, block_size=4)
+        b = PagedKVCacheManager(num_blocks=8, block_size=4)
+        a.allocate("s#0", 4)
+        b.allocate("s#0", 4)
+        with pytest.raises(ValueError, match="already allocated"):
+            b.import_seq(a.export_seq("s#0"))
+
+    def test_mid_extend_exhaustion_after_migration_leaks_nothing(self):
+        """The imported sequence keeps extending on the destination; when
+        THAT pool runs dry mid-extend, freeing the sequence returns every
+        block — including any appended before the exhaustion raised."""
+        a = PagedKVCacheManager(num_blocks=8, block_size=4)
+        b = PagedKVCacheManager(num_blocks=3, block_size=4)
+        a.allocate("s#0", 8)  # 2 blocks
+        b.import_seq(a.export_seq("s#0"))
+        with pytest.raises(OutOfBlocksError):
+            b.extend("s#0", 4 * 4)  # needs 4 more blocks, only 1 free
+        b.free_seq("s#0")
+        assert b.blocks_in_use == 0
+
+    def test_export_unknown_seq_raises(self):
+        a = PagedKVCacheManager(num_blocks=4, block_size=4)
+        with pytest.raises(KeyError):
+            a.export_seq("nope#0")
+
+    def test_exported_snapshot_is_immutable(self):
+        a = PagedKVCacheManager(num_blocks=8, block_size=4)
+        a.allocate("s#0", 4)
+        exp = a.export_seq("s#0")
+        assert isinstance(exp, SeqExport)
+        a.extend("s#0", 8)
+        assert len(exp.blocks) == 1  # snapshot taken before the extend
+
+
+# -------------------------------------------------------------------------
+# engine end-to-end
+# -------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("internlm2_1_8b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _spec(name, prio, steps=STEPS):
+    return StreamSpec(name=name, priority=prio, period_ms=8000.0,
+                      deadline_ms=8000.0, prefill_ms=50.0, decode_ms=5.0,
+                      decode_steps=steps)
+
+
+def _reference_tokens(cfg, params, prompt, steps=STEPS):
+    eng = ServeEngine(cfg, params, max_seq=32)
+    try:
+        assert eng.admit(_spec("ref", 1, steps=steps)).admitted
+        return eng.generate("ref", prompt, steps=steps).tokens
+    finally:
+        eng.close()
+
+
+def _engine(cfg, params, *, num_servers=2, max_batch=4):
+    return ServeEngine(cfg, params, max_seq=32, num_servers=num_servers,
+                       batching=True, max_batch=max_batch, paged=True,
+                       kv_block_size=8)
+
+
+def _run_streams(eng, prompts, steps=STEPS):
+    out = {}
+
+    def worker(n):
+        try:
+            out[n] = eng.generate(n, prompts[n], steps=steps)
+        except Exception as e:  # noqa: BLE001 - recorded for assertions
+            out[n] = e
+
+    threads = [threading.Thread(target=worker, args=(n,)) for n in prompts]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    return out
+
+
+def _assert_no_leaks(eng):
+    assert eng.kv_blocks_in_use() == 0
+    for si in eng.pool.alive_servers():
+        assert len(eng._slots[si].free) == eng.max_batch
+
+
+class TestEngineMigration:
+    def test_manual_migration_bit_identical(self, setup):
+        """A migration intent placed before the run moves the stream's
+        blocks mid-decode; tokens match the never-migrated reference and
+        nothing leaks on either server."""
+        cfg, params = setup
+        prompt = np.array([[1, 2, 3, 4, 5, 6, 7, 8]], np.int32)
+        want = _reference_tokens(cfg, params, prompt)
+        eng = _engine(cfg, params)
+        try:
+            assert eng.admit(_spec("s0", 1)).admitted
+            src = eng.pool.server_of("s0")
+            dst = 1 - src
+            decision, d = eng.admission.migrate("s0", dst)
+            assert decision.admitted and d == dst
+            assert eng.pool.request_migration("s0", dst)
+            res = eng.generate("s0", prompt, steps=STEPS)
+            assert res.tokens == want
+            assert eng.migrations_completed == 1
+            assert eng.pool.server_of("s0") == dst
+            assert eng.admission.device_of("s0") == dst
+            _assert_no_leaks(eng)
+            # the moved stream keeps serving from the destination
+            assert eng.generate("s0", prompt, steps=STEPS).tokens == want
+            _assert_no_leaks(eng)
+        finally:
+            eng.close()
+
+    def test_work_stealing_rebalances_live(self, setup):
+        """All streams pinned on one server, the other idle: a rebalance
+        pass steals at least one mid-flight stream, tokens stay exact, and
+        the ledger drains to zero."""
+        cfg, params = setup
+        prompt = np.array([[1, 2, 3, 4]], np.int32)
+        steps = 12
+        want = _reference_tokens(cfg, params, prompt, steps=steps)
+        eng = _engine(cfg, params)
+        try:
+            names = [f"s{i}" for i in range(3)]
+            for i, n in enumerate(names):
+                assert eng.admit(_spec(n, i + 1, steps=steps)).admitted
+            for n in names:  # pin everything onto server 0
+                if eng.admission.device_of(n) != 0:
+                    assert eng.admission.migrate(n, 0)[1] == 0
+                eng.pool.reassign(n, 0, priority=eng._streams[n].priority)
+            out = {}
+
+            def worker(n):
+                out[n] = eng.generate(n, prompt, steps=steps)
+
+            threads = [threading.Thread(target=worker, args=(n,))
+                       for n in names]
+            for t in threads:
+                t.start()
+            deadline = time.monotonic() + 10
+            while (len(eng._active_jobs) < len(names)
+                   and time.monotonic() < deadline):
+                time.sleep(0.001)
+            stolen = eng.rebalance_once()
+            for t in threads:
+                t.join()
+            assert stolen >= 1
+            assert eng.migrations_completed >= 1
+            for n in names:
+                assert out[n].tokens == want, n
+            _assert_no_leaks(eng)
+        finally:
+            eng.close()
+
+    def test_steal_loop_under_fault_tolerance_tick(self, setup):
+        """enable_work_stealing piggybacks on the heartbeat tick when fault
+        tolerance is on; a full concurrent run stays bit-identical and
+        leak-free."""
+        cfg, params = setup
+        prompt = np.array([[1, 2, 3, 4]], np.int32)
+        want = _reference_tokens(cfg, params, prompt)
+        eng = _engine(cfg, params)
+        eng.enable_fault_tolerance(heartbeat_timeout_s=30.0, poll_s=0.005)
+        eng.enable_work_stealing()
+        assert eng.pool._monitor.on_tick is not None
+        try:
+            names = [f"s{i}" for i in range(4)]
+            for i, n in enumerate(names):
+                assert eng.admit(_spec(n, i + 1)).admitted
+            out = _run_streams(eng, {n: prompt for n in names})
+            for n in names:
+                assert not isinstance(out[n], Exception), out[n]
+                assert out[n].tokens == want, n
+            _assert_no_leaks(eng)
+        finally:
+            eng.close()
+
+    def test_remove_race_frees_both_sides_once(self, setup):
+        """Deterministic replay of the remove()-during-migration race: the
+        stream is removed while the gather is in flight.  remove() frees
+        BOTH ledger sides; the migration's commit must observe the empty
+        ledger and raise instead of double-freeing."""
+        cfg, params = setup
+        eng = _engine(cfg, params)
+        try:
+            assert eng.admit(_spec("s0", 1)).admitted
+            seq_id, _ = eng._paged_reserve(0, "s0", 4, STEPS, 8)
+            assert eng.kv_blocks_in_use() > 0
+            src = eng._paged[0]
+            src.pools = M.init_paged_cache(cfg, src.mgr.num_blocks,
+                                           src.mgr.block_size)
+            real_export = eng._export_kv
+            fired = []
+
+            def export_and_remove(pools, table):
+                packed = real_export(pools, table)
+                if not fired:
+                    fired.append(True)
+                    eng.remove("s0")  # lands mid-copy, before commit
+                return packed
+
+            eng._export_kv = export_and_remove
+            with pytest.raises(StreamShedError, match="removed"):
+                eng._execute_migration("s0", seq_id, 0, 1, 0)
+            assert fired
+            assert eng.kv_blocks_in_use() == 0  # freed once, by remove()
+            assert eng.migrations_completed == 0
+        finally:
+            eng._export_kv = real_export
+            eng.close()
+
+    def test_migration_to_full_destination_aborts_clean(self, setup):
+        """Destination pool exhaustion aborts the move all-or-nothing: the
+        stream keeps its source blocks and the destination stays empty."""
+        cfg, params = setup
+        eng = _engine(cfg, params)
+        try:
+            assert eng.admit(_spec("s0", 1)).admitted
+            seq_id, _ = eng._paged_reserve(0, "s0", 4, STEPS, 8)
+            src = eng._paged[0]
+            src.pools = M.init_paged_cache(cfg, src.mgr.num_blocks,
+                                           src.mgr.block_size)
+            src_used = src.mgr.blocks_in_use
+            dst = eng._paged[1]
+            hog = dst.mgr.allocate("hog#0", dst.mgr.num_blocks
+                                   * dst.mgr.block_size - dst.mgr.block_size)
+            assert hog
+            with pytest.raises(OutOfBlocksError):
+                eng._execute_migration("s0", seq_id, 0, 1, 0)
+            assert eng._paged[0].mgr.blocks_in_use == src_used
+            assert seq_id not in dst.mgr.seqs
+            dst.mgr.free_seq("hog#0")
+            eng._paged_release(0, seq_id)
+            eng.remove("s0")
+            assert eng.kv_blocks_in_use() == 0
+        finally:
+            eng.close()
+
+
+class TestElastic:
+    def test_consolidate_then_remove_server(self, setup):
+        """Scale-down end-to-end: grow to 3 servers, consolidate server 0,
+        retire it, and keep serving bit-identically from the survivors."""
+        cfg, params = setup
+        prompt = np.array([[1, 2, 3, 4, 5, 6, 7, 8]], np.int32)
+        want = _reference_tokens(cfg, params, prompt)
+        eng = _engine(cfg, params)
+        try:
+            names = [f"s{i}" for i in range(3)]
+            for i, n in enumerate(names):
+                assert eng.admit(_spec(n, i + 1)).admitted
+            si = eng.add_server()
+            assert si == 2
+            assert set(eng.pool.alive_servers()) == {0, 1, 2}
+            on0 = eng.pool.streams_on(0)
+            moved = eng.consolidate(0)
+            assert set(moved) == set(on0)
+            assert all(d != 0 for d in moved.values())
+            eng.remove_server(0, timeout_s=10.0)
+            assert 0 not in eng.pool.alive_servers()
+            assert len(eng.degraded_reports) == 1
+            assert not eng.degraded_reports[0].shed  # idle pool: all moved
+            out = _run_streams(eng, {n: prompt for n in names})
+            for n in names:
+                assert not isinstance(out[n], Exception), out[n]
+                assert out[n].tokens == want, n
+            _assert_no_leaks(eng)
+        finally:
+            eng.close()
+
+    def test_elastic_controller_ramp(self, setup):
+        """LoadTrajectory drives scale_to up and down; streams admitted at
+        any pool size keep generating the reference tokens throughout."""
+        cfg, params = setup
+        prompt = np.array([[1, 2, 3, 4]], np.int32)
+        want = _reference_tokens(cfg, params, prompt)
+        eng = _engine(cfg, params)
+        try:
+            assert eng.admit(_spec("s0", 1)).admitted
+            ctl = ElasticPoolController(eng, min_servers=1, max_servers=4)
+            traj = LoadTrajectory(((0.0, 2), (1.0, 4), (2.0, 2)))
+            assert traj.target_at(0.0) == 2
+            assert traj.target_at(1.5) == 4
+            assert traj.target_at(99.0) == 2
+            assert len(ctl.live()) == 2
+            ctl.scale_to(traj.target_at(1.5))
+            assert len(ctl.live()) == 4
+            assert eng.generate("s0", prompt, steps=STEPS).tokens == want
+            ctl.scale_to(traj.target_at(2.0))
+            assert len(ctl.live()) == 2
+            assert eng.generate("s0", prompt, steps=STEPS).tokens == want
+            _assert_no_leaks(eng)
+            assert [e[0] for e in ctl.events].count("add") == 2
+            assert [e[0] for e in ctl.events].count("remove") == 2
+        finally:
+            eng.close()
+
+    def test_added_server_participates_in_admission(self, setup):
+        """add_server grows the admission partition in lockstep: a stream
+        that no longer fits the old pool is provable on the new device."""
+        cfg, params = setup
+        eng = _engine(cfg, params, num_servers=1, max_batch=2)
+        try:
+            # saturate the single device
+            admitted = []
+            for i in range(64):
+                spec = StreamSpec(name=f"s{i}", priority=1, period_ms=100.0,
+                                  deadline_ms=100.0, prefill_ms=20.0,
+                                  decode_ms=5.0, decode_steps=4)
+                if not eng.admit(spec).admitted:
+                    break
+                admitted.append(spec.name)
+            else:
+                pytest.fail("single device never saturated")
+            reject = StreamSpec(name="late", priority=1, period_ms=100.0,
+                                deadline_ms=100.0, prefill_ms=20.0,
+                                decode_ms=5.0, decode_steps=4)
+            assert not eng.admit(reject).admitted
+            eng.add_server()
+            d = eng.admit(reject)
+            assert d.admitted
+            assert eng.admission.device_of("late") == 1
+            assert eng.pool.server_of("late") == 1
+        finally:
+            eng.close()
+
+
+class TestStaticPricing:
+    def test_static_costs_feed_unseen_migrate_cells(self, setup):
+        """hlo_cost static pricing lets the cost model price a migration
+        width it never measured: observe ONE migrate cell, predict another
+        — finite, positive, and monotone in width."""
+        cfg, params = setup
+        eng = _engine(cfg, params, num_servers=1)
+        try:
+            costs = eng.static_cell_costs()
+            assert costs  # one entry per width bucket
+            assert all(k[0] == "migrate" for k in costs)
+            assert all(f >= 0 and b > 0 for f, b in costs.values())
+            widths = sorted(k[1] for k in costs)
+            by_w = {k[1]: v for k, v in costs.items()}
+            for lo, hi in zip(widths, widths[1:]):
+                assert by_w[hi][1] >= by_w[lo][1]  # bytes grow with width
+            model = StepCostModel(work=hlo_cell_features(costs))
+            w_seen, w_unseen = widths[-1], widths[0]
+            model.observe(("migrate", w_seen, eng.kv_block_size), 4e-3)
+            pred = model.predict("migrate", w_unseen, eng.kv_block_size)
+            import math
+            assert math.isfinite(pred) and pred > 0
+        finally:
+            eng.close()
+
+    def test_static_costs_price_decode_and_prefill_cells(self, setup):
+        cfg, params = setup
+        eng = _engine(cfg, params, num_servers=1)
+        try:
+            costs = eng.static_cell_costs(
+                [("decode", 2, 4), ("prefill", 1, 8)])
+            assert costs[("decode", 2, 4)][0] > 0  # decode does real math
+            assert costs[("prefill", 1, 8)][0] > 0
+        finally:
+            eng.close()

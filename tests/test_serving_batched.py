@@ -243,12 +243,14 @@ class TestPagedPoolServing:
                           batching=True, max_batch=4, paged=True,
                           kv_block_size=8)
         try:
-            # rows in {1,2,4} x widths in {1,2,4} (nb_max=32/8) = 9 cells
+            # rows in {1,2,4} x widths in {1,2,4} (nb_max=32/8) = 9 decode
+            # cells, plus one migrate (gather+scatter) cell per width = 12
             rep = eng.precompile()
-            assert rep.compiled == 9 and rep.skipped == 0
+            assert rep.compiled == 12 and rep.skipped == 0
+            assert rep.migrate_cells == (1, 2, 4)
             # second call: everything already warm -> all deduped away
             rep2 = eng.precompile()
-            assert rep2.compiled == 0 and rep2.skipped == 9
+            assert rep2.compiled == 0 and rep2.skipped == 12
             before = eng._decode_paged._cache_size()
             assert eng.admit(_spec("w", 1)).admitted
             res = eng.generate("w", np.array([[1, 2, 3]], np.int32), steps=4)
@@ -269,8 +271,9 @@ class TestPagedPoolServing:
         try:
             assert eng._row_buckets == (1, 2, 4, 6)
             rep = eng.precompile()
-            # rows {1,2,4,6} x widths {1,2,4} = 12 cells
-            assert rep.compiled == 12
+            # rows {1,2,4,6} x widths {1,2,4} = 12 decode cells, + the 3
+            # per-width migrate cells
+            assert rep.compiled == 15
             assert (6, 1) in rep.decode_cells
         finally:
             eng.close()
@@ -286,10 +289,12 @@ class TestPagedPoolServing:
         try:
             hot = {("decode", 2, 2)}
             rep = eng.precompile(traffic=hot)
-            # the hot cell + the (4, 4) fallback
-            assert rep.compiled == 2
+            # the hot cell + the (4, 4) fallback + the width-4 migrate
+            # fallback (a steal can hit any stream regardless of traffic)
+            assert rep.compiled == 3
             assert set(rep.decode_cells) == {(2, 2), (4, 4)}
-            assert rep.skipped == 9 - 2
+            assert rep.migrate_cells == (4,)
+            assert rep.skipped == (9 - 2) + (3 - 1)
             before = eng._decode_paged._cache_size()
             assert eng.admit(_spec("t", 1)).admitted
             res = eng.generate("t", np.array([[1, 2, 3]], np.int32), steps=4)
@@ -320,8 +325,9 @@ class TestPagedPoolServing:
             assert pb == (4, 32)   # tight cover 4 + forced max_seq
             assert wb == (1, 4)    # every need is 1 block + forced nb_max
             rep = eng.precompile()
-            # rows {1,2,4} x tuned widths {1,4} = 6 decode cells
-            assert rep.compiled == 6
+            # rows {1,2,4} x tuned widths {1,4} = 6 decode cells, + the 2
+            # tuned-width migrate cells
+            assert rep.compiled == 8
             assert eng.admit(_spec("b", 1)).admitted
             res = eng.generate("b", np.array([[1, 2, 3]], np.int32),
                                steps=4)

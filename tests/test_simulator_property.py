@@ -45,6 +45,7 @@ except ImportError:  # deterministic fallback sampler
 from repro.core import fmlp_analysis, mpcp_analysis, server_analysis, simulator
 from repro.core.allocation import allocate, allocate_pool
 from repro.core.faults import seeded_device_faults
+from repro.core.migration import seeded_stream_migrations
 from repro.core.taskset_gen import GenParams, generate_taskset
 
 
@@ -206,6 +207,60 @@ def test_faulted_bound_dominates_fault_free_phase(seed):
             continue
         assert bf >= b0 - 1e-9
         assert abs((bf - b0) - res.recovery_delay[t.name]) <= 1e-6
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_migrated_analysis_dominates_simulation_under_migrations(seed):
+    """Migration-delay-augmented bound soundness: under a seeded planned-
+    migration schedule (work stealing / consolidation — tasks move to
+    other devices mid-traffic, each paying a one-time block-copy segment),
+    the per-task bound of ``analyze_pool_under_migrations`` — sum of
+    per-phase Eqs (1)-(6) bounds, NO detection gap — must dominate the
+    simulated WCRT replaying the SAME schedule.  The simulator charges the
+    copy cost once on the first post-move job while the analysis keeps the
+    segment in every later phase, so domination is structural, not lucky."""
+    rng = random.Random(seed)
+    params = GenParams(num_cores=4, num_tasks=(4, 10), epsilon_ms=0.05)
+    tasks = generate_taskset(params, rng)
+    system = allocate_pool(tasks, 3, 2, epsilon=params.epsilon_ms)
+    horizon = _horizon(system)
+    migrations = seeded_stream_migrations(system, seed, num_migrations=2,
+                                          horizon_ms=horizon)
+    res = server_analysis.analyze_pool_under_migrations(system, migrations)
+    sim = simulator.simulate(system, mode="server_batched",
+                             horizon_ms=horizon, batch_max=4,
+                             migrations=migrations)
+    for t in system.tasks:
+        bound = res.wcrt(t.name)
+        observed = sim.wcrt(t.name)
+        if not math.isinf(bound):
+            assert observed <= bound + 1e-3, (
+                f"{t.name} (device {t.device}, migrations {migrations}): "
+                f"simulated {observed} > migration-augmented bound {bound}"
+            )
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(**_SETTINGS)
+def test_migrated_bound_dominates_migration_free_phase(seed):
+    """The migration-delay-augmented bound can only grow: for every task it
+    is >= the migration-free phase-0 bound, and the excess is exactly the
+    reported per-task migration delay."""
+    rng = random.Random(seed)
+    params = GenParams(num_cores=4, num_tasks=(4, 10), epsilon_ms=0.05)
+    tasks = generate_taskset(params, rng)
+    system = allocate_pool(tasks, 3, 2, epsilon=params.epsilon_ms)
+    migrations = seeded_stream_migrations(system, seed, num_migrations=3,
+                                          horizon_ms=_horizon(system))
+    res = server_analysis.analyze_pool_under_migrations(system, migrations)
+    base = server_analysis.analyze_pool(system)
+    for t in system.tasks:
+        b0, bm = base.wcrt(t.name), res.wcrt(t.name)
+        if math.isinf(b0) or math.isinf(bm):
+            continue
+        assert bm >= b0 - 1e-9
+        assert abs((bm - b0) - res.migration_delay[t.name]) <= 1e-6
 
 
 @given(seed=st.integers(0, 10_000))
