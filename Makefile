@@ -3,8 +3,9 @@
 # tests deselected (the quick pre-commit loop).  `make bench-smoke` is the
 # CI-sized benchmark pass: the paged-vs-masked-dense decode sweep (writes
 # BENCH_paged_decode_smoke.json; the committed full-grid artifact is
-# BENCH_paged_decode.json from `--paged-sweep` without --smoke) plus the
-# cost-model calibration loop.  `make bench-calibrate` runs the
+# BENCH_paged_decode.json from `--paged-sweep` without --smoke; the same
+# flag also emits one paged-vs-dense cell per cache family to
+# BENCH_paged_families.json) plus the cost-model calibration loop.  `make bench-calibrate` runs the
 # calibration alone: measure cells -> fit surface -> calibrated-admission
 # capacity; writes BENCH_cost_model.json (tracked) and FAILS when the
 # median predicted-vs-measured relative error blows past its threshold or
@@ -17,7 +18,7 @@ PYTEST = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python -m pytest -x -q
 PYRUN = PYTHONPATH=src$${PYTHONPATH:+:$$PYTHONPATH} python
 
 .PHONY: test test-fast test-chaos test-migration test-scenarios \
-	bench-smoke bench-calibrate
+	test-paged-families bench-smoke bench-calibrate
 
 test:
 	$(PYTEST)
@@ -40,6 +41,14 @@ test-migration:
 # analysis claims to cover, property-tested bound >= simulated WCRT
 test-scenarios:
 	$(PYTEST) tests/test_scenarios.py
+
+# one paged substrate, every cache family (GQA / MLA latent / SSM slabs /
+# hybrid / enc-dec shared segments): per-family greedy bit-identical to the
+# unbatched dense path, migration round-trips, zero leaked
+# blocks/slabs/segments
+test-paged-families:
+	$(PYTEST) tests/test_paged_families.py tests/test_models_paged.py \
+		tests/test_kvcache.py
 
 bench-smoke:
 	$(PYRUN) benchmarks/batching_throughput.py --paged-sweep --smoke

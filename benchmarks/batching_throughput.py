@@ -199,8 +199,90 @@ def paged_sweep(*, smoke: bool = False) -> dict:
     return report
 
 
+FAMILY_ARCHS = (
+    ("internlm2_1_8b", "gqa"),
+    ("deepseek_v2_lite_16b", "mla"),
+    ("mamba2_780m", "ssm"),
+    ("zamba2_7b", "hybrid"),
+    ("whisper_medium", "encdec"),
+)
+
+
+def family_sweep(*, smoke: bool = False) -> dict:
+    """One paged-vs-masked-dense cell per CACHE FAMILY (the same serving
+    engine, five pool layouts: GQA KV blocks, MLA latent blocks, SSM state
+    slabs, hybrid block+slab, enc-dec shared cross segments), plus the
+    MLA latent pool's block-size sensitivity — the latent rows are narrow
+    (r + rope, not n_kv*hd), so the gather-width/bucket-waste tradeoff
+    sits at a different block size than plain GQA."""
+    import jax
+
+    from repro.configs.registry import get_config
+    from repro.models import model as M
+
+    max_batch = 4
+    max_seq = 64
+    steps = 12 if smoke else 24
+    occ = 2
+    repeats = 2 if smoke else 3
+    report: dict = {"max_batch": max_batch, "max_seq": max_seq,
+                    "steps": steps, "occupancy": occ, "families": {},
+                    "mla_block_size": []}
+
+    for arch, family in FAMILY_ARCHS:
+        cfg = get_config(arch).reduced()
+        params = M.init_params(cfg, jax.random.PRNGKey(0))
+        cell: dict = {"arch": arch}
+        for mode, paged in (("masked_dense", False), ("paged", True)):
+            engine = _make_engine(cfg, params, batching=True,
+                                  max_batch=max_batch, paged=paged,
+                                  max_seq=max_seq)
+            try:
+                engine.precompile(prompt_buckets=(PROMPT_LEN,))
+                _run(engine, occ, steps=steps)
+                cell[mode] = _best_of(engine, occ, steps=steps,
+                                      repeats=repeats,
+                                      key="decode_tokens_per_s")
+            finally:
+                engine.close()
+        cell["speedup"] = (cell["paged"]["decode_tokens_per_s"]
+                           / cell["masked_dense"]["decode_tokens_per_s"])
+        report["families"][family] = cell
+        print(f"{family:>7}: masked "
+              f"{cell['masked_dense']['decode_tokens_per_s']:8.1f} tok/s | "
+              f"paged {cell['paged']['decode_tokens_per_s']:8.1f} tok/s | "
+              f"speedup {cell['speedup']:.2f}x")
+
+    cfg = get_config("deepseek_v2_lite_16b").reduced()
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    for bs in ((8, 32) if smoke else (8, 16, 32)):
+        from repro.serving.engine import ServeEngine
+
+        engine = ServeEngine(cfg, params, max_seq=max_seq, ordering="fifo",
+                             num_servers=1, batching=True,
+                             max_batch=max_batch, paged=True,
+                             kv_block_size=bs)
+        try:
+            engine.precompile(prompt_buckets=(PROMPT_LEN,))
+            _run(engine, occ, steps=steps)
+            r = _best_of(engine, occ, steps=steps, repeats=repeats,
+                         key="decode_tokens_per_s")
+        finally:
+            engine.close()
+        report["mla_block_size"].append(
+            {"block_size": bs,
+             "decode_tokens_per_s": r["decode_tokens_per_s"]})
+        print(f"mla bs={bs:3d}: {r['decode_tokens_per_s']:8.1f} tok/s")
+
+    out = Path(__file__).parent / "BENCH_paged_families.json"
+    out.write_text(json.dumps(report, indent=2))
+    print(f"wrote {out}")
+    return report
+
+
 if __name__ == "__main__":
     if "--paged-sweep" in sys.argv:
         paged_sweep(smoke="--smoke" in sys.argv)
+        family_sweep(smoke="--smoke" in sys.argv)
     else:
         main()

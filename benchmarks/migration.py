@@ -166,7 +166,7 @@ def bench_migration_latency(cfg, params, *, lengths, reps: int) -> dict:
             samples = []
             blocks = None
             for rep in range(reps + 1):  # rep 0 is an untimed warmup
-                seq_id, _ = eng._paged_reserve(0, "mv0", tokens, 0, 8)
+                seq_id, _, _, _ = eng._paged_reserve(0, "mv0", tokens, 0, 8)
                 src = eng._paged[0]
                 if src.pools is None:
                     src.pools = M.init_paged_cache(cfg, src.mgr.num_blocks,

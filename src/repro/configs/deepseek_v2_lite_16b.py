@@ -32,5 +32,6 @@ CONFIG = ModelConfig(
     moe_d_ff=1408,
     first_dense_layers=1,
     mlp_type="swiglu",
+    cache_family="mla",  # paged decode over shared-latent block pools
     notes="DeepSeek-V2-Lite: MLA attention + fine-grained MoE.",
 )

@@ -21,5 +21,6 @@ CONFIG = ModelConfig(
     conv_width=4,
     tie_embeddings=True,
     subquadratic=True,
+    cache_family="ssm",  # paged decode over fixed-size state-slab pools
     notes="Mamba2-780m: pure SSD blocks, d_inner=3072, 48 heads of 64.",
 )

@@ -65,6 +65,13 @@ class ModelConfig:
     # frontend stub: model consumes precomputed embeddings, not raw tokens
     embed_inputs: bool = False
 
+    # paged-serving cache family (serving.kvcache.FAMILIES key): which pooled
+    # cache layout this arch decodes under ("gqa" | "mla" | "ssm" | "hybrid" |
+    # "encdec").  "" -> derived (only plain GQA stacks derive one implicitly;
+    # everything else must declare or it gets NO paged path — never a silent
+    # dense fallback).
+    cache_family: str = ""
+
     mlp_type: str = "swiglu"  # swiglu | gelu
     norm_eps: float = 1e-5
     tie_embeddings: bool = False

@@ -23,5 +23,6 @@ CONFIG = ModelConfig(
     tie_embeddings=True,  # whisper ties the decoder embedding and unembedding
     rope_theta=0.0,  # whisper uses learned/sinusoidal absolute positions
     embed_inputs=False,  # decoder consumes tokens; encoder consumes embeddings
+    cache_family="encdec",  # paged self-KV + refcounted shared cross segments
     notes="Whisper-medium backbone; conv frontend stubbed via input_specs().",
 )

@@ -25,5 +25,6 @@ CONFIG = ModelConfig(
     attn_every=6,
     mlp_type="swiglu",
     subquadratic=True,  # Mamba2 backbone; attention is sparse-in-depth
+    cache_family="hybrid",  # paged decode: attn block pools + mamba slabs
     notes="Zamba2-7B hybrid: Mamba2 layers + shared attn block every 6 layers.",
 )

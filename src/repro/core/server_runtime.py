@@ -70,14 +70,22 @@ def cell_key(meta: dict) -> tuple | None:
     to ``("migrate", padded_table_width, block_size)`` — ``padded`` is the
     pow2-bucketed number of blocks moved, the axis that sizes the copy.
     Entries without a recognizable shape decision return None (not
-    aggregated)."""
+    aggregated).
+
+    Non-GQA cache families tag their kinds ``"<base>@<family>"`` (e.g.
+    ``"decode@mla"``): the base kind before the ``@`` decides which shape
+    fields apply, and the TAGGED kind is kept as the cell's phase — each
+    family's cells stay separate in the cost model (their step costs differ:
+    latent rows, state slabs, segment gathers), while plain GQA keeps the
+    untagged phase for back-compat."""
     kind = meta.get("kind")
-    if kind == "decode" and "padded" in meta and "width" in meta:
-        return ("decode", int(meta["padded"]), int(meta["width"]))
-    if kind == "prefill" and "padded" in meta and "bucket" in meta:
-        return ("prefill", int(meta["padded"]), int(meta["bucket"]))
-    if kind == "migrate" and "padded" in meta and "width" in meta:
-        return ("migrate", int(meta["padded"]), int(meta["width"]))
+    base = kind.split("@", 1)[0] if isinstance(kind, str) else kind
+    if base == "decode" and "padded" in meta and "width" in meta:
+        return (kind, int(meta["padded"]), int(meta["width"]))
+    if base == "prefill" and "padded" in meta and "bucket" in meta:
+        return (kind, int(meta["padded"]), int(meta["bucket"]))
+    if base == "migrate" and "padded" in meta and "width" in meta:
+        return (kind, int(meta["padded"]), int(meta["width"]))
     return None
 
 

@@ -102,3 +102,89 @@ def paged_decode_attention(q, k_pool, v_pool, block_tables, lengths, *,
         interpret=interpret,
     )(block_tables, lengths, q[:, :, None, :], k_pool, v_pool)
     return out[:, :, 0, :]
+
+
+# --------------------------------------------------------------------------
+# MLA variant: absorbed decode over latent block pools
+# --------------------------------------------------------------------------
+
+
+def _paged_mla_kernel(tables_ref, len_ref, q_ref, ckv_ref, krope_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *, scale: float, bs: int,
+                      r: int):
+    j = pl.program_id(2)
+    nb = pl.num_programs(2)
+    length = len_ref[pl.program_id(0)]
+
+    @pl.when(j == 0)
+    def _init():
+        online_softmax_init(m_ref, l_ref, acc_ref)
+
+    @pl.when(j * bs < length)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)        # (1, R+PR) absorbed query
+        ckv = ckv_ref[0].astype(jnp.float32)       # (bs, R): one pool block
+        krope = krope_ref[0].astype(jnp.float32)   # (bs, PR)
+        # MLA's key IS (latent ‖ rope-key) and its value IS the latent:
+        # the shared online-softmax core handles k/v of different widths
+        # (acc is sized by v), so the only MLA-specific work is the concat
+        k = jnp.concatenate([ckv, krope], axis=-1)  # (bs, R+PR)
+        cols = j * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+        online_softmax_block(q, k, ckv, cols, length, scale, m_ref, l_ref,
+                             acc_ref)
+
+    @pl.when(j == nb - 1)
+    def _finalize():
+        o_ref[0, 0] = online_softmax_finalize(l_ref, acc_ref).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("scale", "interpret"))
+def paged_mla_decode_attention(q_lat, q_rope, ckv_pool, krope_pool,
+                               block_tables, lengths, *,
+                               scale: float | None = None,
+                               interpret: bool = False):
+    """Absorbed-MLA paged decode: q_lat (B,Nq,R) latent-projected queries,
+    q_rope (B,Nq,PR); pools ckv (NB,BS,R), k_rope (NB,BS,PR);
+    block_tables (B,W) int32; lengths (B,) -> o_lat (B,Nq,R).
+
+    Per position the key is concat(c_kv, k_rope) and the VALUE is c_kv
+    itself, so the kernel is the GQA paged sweep with a different tile
+    addressing — the caller applies w_uv to the returned latent output.
+    ``scale`` should be 1/sqrt(qk_nope + qk_rope); NOTE the pools carry no
+    head axis (the latent is shared by every head — MLA's memory win), so
+    each of the Nq sweeps re-reads the same blocks.
+    """
+    b, nq, r = q_lat.shape
+    pr = q_rope.shape[-1]
+    bs = ckv_pool.shape[1]
+    w = block_tables.shape[1]
+    scale = scale if scale is not None else (r + pr) ** -0.5
+    q = jnp.concatenate([q_lat, q_rope], axis=-1)[:, :, None, :]
+
+    kernel = functools.partial(_paged_mla_kernel, scale=scale, bs=bs, r=r)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # block_tables, lengths
+        grid=(b, nq, w),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, r + pr),
+                         lambda b_, n, j, t, l: (b_, n, 0, 0)),
+            pl.BlockSpec((1, bs, r), lambda b_, n, j, t, l: (t[b_, j], 0, 0)),
+            pl.BlockSpec((1, bs, pr), lambda b_, n, j, t, l: (t[b_, j], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, r),
+                               lambda b_, n, j, t, l: (b_, n, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1, r), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b, nq, 1, r), q_lat.dtype),
+        compiler_params=tpu_compiler_params(
+            ("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(block_tables, lengths, q, ckv_pool, krope_pool)
+    return out[:, :, 0, :]

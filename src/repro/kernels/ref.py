@@ -67,6 +67,49 @@ def paged_decode_attention_ref(q, k_pool, v_pool, block_tables, lengths, *,
                                 scale=scale)
 
 
+def paged_mla_decode_attention_ref(q_lat, q_rope, ckv_pool, krope_pool,
+                                   block_tables, lengths, *,
+                                   scale: float | None = None):
+    """q_lat (B,Nq,R); q_rope (B,Nq,PR); pools ckv (NB,BS,R) /
+    k_rope (NB,BS,PR); block_tables (B,W); lengths (B,) -> o_lat (B,Nq,R).
+
+    Absorbed MLA over the gathered latent view: key = concat(c_kv, k_rope),
+    value = c_kv itself."""
+    f32 = jnp.float32
+    bs = ckv_pool.shape[1]
+    b, w = block_tables.shape
+    r, pr = q_lat.shape[-1], q_rope.shape[-1]
+    scale = scale if scale is not None else (r + pr) ** -0.5
+    ckv = ckv_pool[block_tables].reshape(b, w * bs, r).astype(f32)
+    krope = krope_pool[block_tables].reshape(b, w * bs, pr).astype(f32)
+    logits = (jnp.einsum("bnr,btr->bnt", q_lat.astype(f32), ckv)
+              + jnp.einsum("bnp,btp->bnt", q_rope.astype(f32), krope)) * scale
+    valid = jnp.arange(w * bs)[None, :] < lengths[:, None]  # (B, W*BS)
+    logits = jnp.where(valid[:, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bnt,btr->bnr", probs, ckv).astype(q_lat.dtype)
+
+
+def ssd_slab_decode_ref(state_pool, slab_ids, x, dt, A, B, C):
+    """state_pool (NS,H,P,N) fp32; slab_ids (B,); x (B,H,P); dt (B,H);
+    A (H,); B/C (B,G,N) -> (y (B,H,P), states (B,H,P,N) fp32).
+
+    One SSD recurrent step over each row's gathered slab (same math as
+    models.ssm.ssd_decode_step, state addressed through the pool)."""
+    f32 = jnp.float32
+    h = x.shape[1]
+    hg = h // B.shape[1]
+    state = state_pool[slab_ids].astype(f32)
+    dtf = dt.astype(f32)
+    dec = jnp.exp(dtf * A)  # (B,H)
+    Bh = jnp.repeat(B, hg, axis=1).astype(f32)  # (B,H,N)
+    Ch = jnp.repeat(C, hg, axis=1).astype(f32)
+    upd = jnp.einsum("bh,bhp,bhn->bhpn", dtf, x.astype(f32), Bh)
+    state = dec[:, :, None, None] * state + upd
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x.dtype), state
+
+
 def ssd_intra_ref(x, dt, dA, B, C):
     """Intra-chunk SSD + chunk-state summary (one chunk per leading index).
 

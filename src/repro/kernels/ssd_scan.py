@@ -91,3 +91,72 @@ def ssd_intra(x, dt, dA, B, C, *, interpret: bool = False):
         interpret=interpret,
     )(x, dt, dA, B, C)
     return y, s
+
+
+# --------------------------------------------------------------------------
+# slab-indexed decode step: per-row SSM state gathered from a SLAB POOL
+# --------------------------------------------------------------------------
+
+
+def _slab_decode_kernel(slab_ref, x_ref, dt_ref, a_ref, b_ref, c_ref,
+                        st_ref, y_ref, out_ref):
+    f32 = jnp.float32
+    st = st_ref[0].astype(f32)    # (H, P, N): this row's slab
+    x = x_ref[0].astype(f32)      # (H, P)
+    dt = dt_ref[0].astype(f32)    # (H,)
+    a = a_ref[...].astype(f32)    # (H,)
+    bb = b_ref[0].astype(f32)     # (H, N) head-expanded
+    cc = c_ref[0].astype(f32)     # (H, N)
+
+    dec = jnp.exp(dt * a)
+    st = dec[:, None, None] * st + (dt[:, None] * x)[..., None] * bb[:, None, :]
+    out_ref[0] = st
+    y_ref[0] = jnp.sum(st * cc[:, None, :], axis=-1).astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_slab_decode(state_pool, slab_ids, x, dt, A, B, C, *,
+                    interpret: bool = False):
+    """One recurrent SSD step with per-row state addressed THROUGH a slab
+    pool: state_pool (NS,H,P,N) fp32, slab_ids (B,) int32, x (B,H,P),
+    dt (B,H), A (H,), B/C (B,G,N) -> (y (B,H,P), states (B,H,P,N) fp32).
+
+    ``slab_ids`` rides as a scalar-prefetch operand and the state's index
+    map reads ``s[i]`` — the slab gather IS the addressing, mirroring how
+    paged_decode_attention addresses KV blocks.  The updated per-row states
+    come back gathered; the caller scatters them with
+    ``state_pool.at[slab_ids].set(states)`` (slabs are unshared, so the
+    scatter cannot race between live rows)."""
+    bsz, h, p = x.shape
+    n = B.shape[-1]
+    hg = h // B.shape[1]
+    Bh = jnp.repeat(B, hg, axis=1)  # (B,H,N)
+    Ch = jnp.repeat(C, hg, axis=1)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,  # slab_ids
+        grid=(bsz,),
+        in_specs=[
+            pl.BlockSpec((1, h, p), lambda i, s: (i, 0, 0)),
+            pl.BlockSpec((1, h), lambda i, s: (i, 0)),
+            pl.BlockSpec((h,), lambda i, s: (0,)),
+            pl.BlockSpec((1, h, n), lambda i, s: (i, 0, 0)),
+            pl.BlockSpec((1, h, n), lambda i, s: (i, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda i, s: (s[i], 0, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, h, p), lambda i, s: (i, 0, 0)),
+            pl.BlockSpec((1, h, p, n), lambda i, s: (i, 0, 0, 0)),
+        ],
+    )
+    y, states = pl.pallas_call(
+        _slab_decode_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((bsz, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bsz, h, p, n), jnp.float32),
+        ],
+        compiler_params=tpu_compiler_params(("arbitrary",)),
+        interpret=interpret,
+    )(slab_ids, x, dt, A, Bh, Ch, state_pool)
+    return y, states

@@ -91,6 +91,45 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=None):
     }
 
 
+def cache_family(cfg) -> str | None:
+    """Enc-dec stacks must DECLARE their family (``cache_family='encdec'``)
+    — the cross cache is a shared read-only segment, not derivable."""
+    return getattr(cfg, "cache_family", "") or None
+
+
+def supports_paged(cfg) -> bool:
+    return cache_family(cfg) == "encdec"
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None, *,
+                     num_slabs: int = 0, num_segments: int = 0):
+    """``self`` — growing decoder self-KV block pools (L, NB, BS, n, hd);
+    ``cross`` — cross-attention KV SEGMENT pools (L, NSeg, enc_seq, n,
+    hd), read-only after prefill and refcount-shared across streams that
+    decode against the same encoder output (COW-dedup of shared
+    prefixes)."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged decode cache unsupported for family={cfg.family!r}")
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    n, hd, nl = cfg.num_kv_heads, cfg.head_dim, cfg.num_layers
+    kv_shape = (nl, num_blocks, block_size, n, hd)
+    seg_shape = (nl, num_segments, cfg.encoder_seq, n, hd)
+    # distinct buffers per leaf: the engine donates the pools into its
+    # jitted steps, and XLA rejects the same buffer donated twice
+    return {"self": (jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype)),
+            "cross": (jnp.zeros(seg_shape, dtype),
+                      jnp.zeros(seg_shape, dtype))}
+
+
+def paged_pool_kinds(cfg) -> dict[str, str]:
+    return {"self": "block", "cross": "segment"}
+
+
+def paged_insert_views(cfg, prefill_cache) -> dict:
+    return {"self": prefill_cache["self"], "cross": prefill_cache["cross"]}
+
+
 def encode(cfg, params, frames):
     """frames (B, T_enc, D) — precomputed embeddings (frontend stub)."""
     b, t, _ = frames.shape
@@ -139,6 +178,44 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
     else:
         enc_out = encode(cfg, params, batch["frames"])
 
+    paged = mode == "decode" and cache is not None and "block_tables" in cache
+    if paged:
+        # self-KV block pools ride as carry (scatter+gather per layer);
+        # the cross segment pools are READ-ONLY — they ride as xs, each
+        # layer gathering its streams' shared segments at ``segment_ids``
+        tables, segs = cache["block_tables"], cache["segment_ids"]
+        pos = cache["pos"]
+
+        def paged_body(carry, inp):
+            x, ks, vs, lidx = carry
+            lp, (ck_pool, cv_pool) = inp
+            h = L.rms_norm(x, lp["ln1"]["scale"], cfg.norm_eps)
+            out, (ks, vs) = L.attention(cfg, lp["attn"], h,
+                                        positions=positions,
+                                        layer_cache=(ks, vs, lidx, tables,
+                                                     pos))
+            x = x + out
+            h = L.rms_norm(x, lp["ln_x"]["scale"], cfg.norm_eps)
+            x = x + _cross_attention(cfg, lp["cross"], h, ck_pool[segs],
+                                     cv_pool[segs])
+            h = L.rms_norm(x, lp["ln2"]["scale"], cfg.norm_eps)
+            x = x + L.mlp(cfg, lp["mlp"], h)
+            return (x, ks, vs, lidx + 1), None
+
+        ks, vs = cache["self"]
+        (x, ks, vs, _), _ = jax.lax.scan(
+            paged_body, (x, ks, vs, jnp.int32(0)),
+            (params["decoder"], cache["cross"]))
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, table,
+                            preferred_element_type=jnp.float32)
+        logits = shd.shard_logits(logits)
+        new_cache = {"self": (ks, vs), "cross": cache["cross"],
+                     "pos": cache["pos"] + 1, "block_tables": tables,
+                     "segment_ids": segs}
+        return logits, new_cache, jnp.zeros((), jnp.float32)
+
     def body(carry, inp):
         x = carry
         if mode == "decode":
@@ -180,8 +257,11 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
     if mode == "prefill":
         max_seq = batch.get("max_seq", s)
         self_c = jax.tree.map(lambda a: _pad_seq(a, 2, max_seq), self_c)
+        lengths = batch.get("lengths")
         new_cache = {"self": self_c, "cross": cross_c,
-                     "pos": jnp.full((b,), s, jnp.int32)}
+                     "pos": (jnp.asarray(lengths, jnp.int32)
+                             if lengths is not None
+                             else jnp.full((b,), s, jnp.int32))}
     else:
         new_cache = {"self": self_c, "cross": cache["cross"],
                      "pos": cache["pos"] + 1}

@@ -90,10 +90,68 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=None):
     return cache
 
 
-def _mamba_sub(cfg, p, x, *, mode, layer_cache):
+def cache_family(cfg) -> str | None:
+    """Hybrid stacks must DECLARE their family (``cache_family='hybrid'``)
+    — two pool kinds ride one scan, nothing derivable to fall back on."""
+    return getattr(cfg, "cache_family", "") or None
+
+
+def supports_paged(cfg) -> bool:
+    return cache_family(cfg) == "hybrid"
+
+
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None, *,
+                     num_slabs: int = 0, num_segments: int = 0):
+    """Both pool kinds for one stack: ``attn`` — shared-attention KV block
+    pools with a leading G (group) axis, every application addressing the
+    SAME per-stream block table into its own plane; ``mamba`` — state slab
+    pools with the G*per_group + tail mamba layers flattened onto one
+    leading axis (a running layer index walks it during the scan)."""
+    if not supports_paged(cfg):
+        raise NotImplementedError(
+            f"paged decode cache unsupported for family={cfg.family!r}")
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    g, per_group, tail = _split(cfg)
+    n_mamba = g * per_group + tail
+    kv_shape = (g, num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
+    return {
+        # two DISTINCT buffers: the engine donates the pools into its jitted
+        # steps, and XLA rejects the same buffer donated twice
+        "attn": (jnp.zeros(kv_shape, dtype), jnp.zeros(kv_shape, dtype)),
+        "mamba": (
+            jnp.zeros((n_mamba, num_slabs, cfg.conv_width - 1,
+                       S.conv_dim(cfg)), dtype),
+            jnp.zeros((n_mamba, num_slabs, cfg.ssm_nheads, cfg.ssm_head_dim,
+                       cfg.ssm_state_dim), jnp.float32),
+        ),
+    }
+
+
+def paged_pool_kinds(cfg) -> dict[str, str]:
+    return {"attn": "block", "mamba": "slab"}
+
+
+def paged_insert_views(cfg, prefill_cache) -> dict:
+    """Reshape a prefill cache into leaves matching the pools dict of
+    :func:`init_paged_cache` — (Laxis, B, ...) per leaf — so the engine's
+    generic scatter can stage any family without knowing its layout."""
+    g, per_group, tail = _split(cfg)
+
+    def flat(leaf_idx):
+        grp = prefill_cache["groups_mamba"][leaf_idx]  # (G, PG, B, ...)
+        out = grp.reshape(g * per_group, *grp.shape[2:])
+        if tail:
+            out = jnp.concatenate([out, prefill_cache["tail"][leaf_idx]], 0)
+        return out
+
+    return {"attn": prefill_cache["groups_attn"],
+            "mamba": (flat(0), flat(1))}
+
+
+def _mamba_sub(cfg, p, x, *, mode, layer_cache, lengths=None):
     h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
     if mode == "prefill":
-        out, c = S.prefill_mamba_cache(cfg, p["mamba"], h)
+        out, c = S.prefill_mamba_cache(cfg, p["mamba"], h, lengths=lengths)
     else:
         out, c = S.mamba2_block(cfg, p["mamba"], h, layer_cache=layer_cache)
     return x + out, c
@@ -112,6 +170,57 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
         positions = jnp.broadcast_to(jnp.arange(s)[None, :], (b, s))
 
     shared = params["shared_attn"]
+    prefill_lengths = None
+    if mode == "prefill" and batch.get("lengths") is not None:
+        prefill_lengths = jnp.asarray(batch["lengths"], jnp.int32)
+
+    paged = mode == "decode" and cache is not None and "block_tables" in cache
+    if paged:
+        # both pool kinds ride the group scan as carry: the mamba slabs
+        # walk a running flat layer index, the shared-attn block pools walk
+        # the group index — one per-stream block table serves every group
+        # plane (storage is disjoint per plane, the table is not)
+        kp, vp = cache["attn"]
+        cs, ss = cache["mamba"]
+        tables, slabs, pos = (cache["block_tables"], cache["slab_ids"],
+                              cache["pos"])
+
+        def mamba_step(c2, lp):
+            xx, cs, ss, li = c2
+            xx, (cs, ss) = _mamba_sub(cfg, lp, xx, mode=mode,
+                                      layer_cache=(cs, ss, li, slabs))
+            return (xx, cs, ss, li + 1), None
+
+        def group_body(carry, gp):
+            x, kp, vp, cs, ss, gidx = carry
+            (x, cs, ss, _), _ = jax.lax.scan(
+                mamba_step, (x, cs, ss, gidx * per_group), gp)
+            h = L.rms_norm(x, shared["ln1"]["scale"], cfg.norm_eps)
+            lc = (kp, vp, gidx, tables, pos)
+            out, (kp, vp) = L.attention(cfg, shared["attn"], h,
+                                        positions=positions, layer_cache=lc)
+            x = x + out
+            h = L.rms_norm(x, shared["ln2"]["scale"], cfg.norm_eps)
+            x = x + L.mlp(cfg, shared["mlp"], h)
+            return (x, kp, vp, cs, ss, gidx + 1), None
+
+        carry = (x, kp, vp, cs, ss, jnp.int32(0))
+        (x, kp, vp, cs, ss, _), _ = jax.lax.scan(group_body, carry,
+                                                 params["groups"])
+        if tail:
+            (x, cs, ss, _), _ = jax.lax.scan(
+                mamba_step, (x, cs, ss, jnp.int32(g * per_group)),
+                params["tail"])
+
+        x = L.rms_norm(x, params["final_norm"]["scale"], cfg.norm_eps)
+        table = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+        logits = jnp.einsum("bsd,dv->bsv", x, table,
+                            preferred_element_type=jnp.float32)
+        logits = shd.shard_logits(logits)
+        new_cache = {"attn": (kp, vp), "mamba": (cs, ss),
+                     "pos": cache["pos"] + 1, "block_tables": tables,
+                     "slab_ids": slabs}
+        return logits, new_cache, jnp.zeros((), jnp.float32)
 
     def group_body(carry, inp):
         x = carry
@@ -127,7 +236,8 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
                 lc = lc + (cache["pos"],)
             else:
                 lp, lc = inp2, None
-            xx, c = _mamba_sub(cfg, lp, xx, mode=mode, layer_cache=lc)
+            xx, c = _mamba_sub(cfg, lp, xx, mode=mode, layer_cache=lc,
+                               lengths=prefill_lengths)
             return xx, c
 
         inner_xs = (gp, mc) if mode == "decode" else gp
@@ -158,7 +268,8 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
                 lc = lc + (cache["pos"],)
             else:
                 lp, lc = inp, None
-            xx, c = _mamba_sub(cfg, lp, xx, mode=mode, layer_cache=lc)
+            xx, c = _mamba_sub(cfg, lp, xx, mode=mode, layer_cache=lc,
+                               lengths=prefill_lengths)
             return xx, c
 
         tail_xs = (params["tail"], cache["tail"]) if mode == "decode" else params["tail"]
@@ -176,7 +287,8 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
     if tail:
         new_cache["tail"] = tail_c
     if mode == "prefill":
-        new_cache["pos"] = jnp.full((b,), s, jnp.int32)
+        new_cache["pos"] = (prefill_lengths if prefill_lengths is not None
+                            else jnp.full((b,), s, jnp.int32))
         max_seq = batch.get("max_seq", s)
         new_cache["groups_attn"] = jax.tree.map(
             lambda a: _pad_seq(a, 2, max_seq), new_cache["groups_attn"])

@@ -246,7 +246,13 @@ def mla_attention(cfg, p: Params, x, *, positions, cache=None, layer_cache=None)
     """MLA: KV compressed to a ``kv_lora_rank`` latent + one shared rotary
     key.  The cache stores only (c_kv, k_rope) — the paper-accurate memory
     win.  Decode uses the absorbed formulation (queries projected into the
-    latent space; no per-step K/V decompression)."""
+    latent space; no per-step K/V decompression).
+
+    Paged decode: ``layer_cache = (ckv_stack, krope_stack, lidx, tables,
+    pos)`` — latent block pools (L, NB, BS, r) / (L, NB, BS, pr) shared
+    across rows, the same block-table indirection as GQA but with much
+    smaller rows (r + pr vs 2 * n_kv * head_dim per token), which is why
+    MLA paging has its own block-size sensitivity."""
     b, s, d = x.shape
     n = cfg.num_heads
     r, pr, pn, hv = cfg.kv_lora_rank, cfg.qk_rope_head_dim, cfg.qk_nope_head_dim, cfg.v_head_dim
@@ -271,6 +277,38 @@ def mla_attention(cfg, p: Params, x, *, positions, cache=None, layer_cache=None)
         mask = (idx[None, :] <= idx[:, None])[None, None, None, :, :]
         out = _sdpa(qq, k, v, mask=mask, scale=scale)
         new_cache = (c_kv, k_rope) if cache == "build" else None
+    elif len(layer_cache) == 5:
+        # paged decode over latent block pools: scatter the new (c_kv,
+        # k_rope) row into this stream's tail block, gather the W live
+        # blocks through the table, then the same absorbed math as the
+        # dense branch.  Rows never share a tail block (COW fork), so the
+        # scatters are row-disjoint exactly as in GQA paged decode.
+        ckv_stack, krope_stack, lidx, tables, pos = layer_cache
+        bs_blk = ckv_stack.shape[2]  # (L, NB, BS, r), (B, W), (B,)
+        bidx = jnp.arange(b)
+        blk = tables[bidx, pos // bs_blk]
+        off = pos % bs_blk
+        ckv_stack = ckv_stack.at[lidx, blk, off].set(
+            c_kv[:, 0].astype(ckv_stack.dtype))
+        krope_stack = krope_stack.at[lidx, blk, off].set(
+            k_rope[:, 0].astype(krope_stack.dtype))
+        w = tables.shape[1]
+        ckv_seq = ckv_stack[lidx, tables].reshape(b, w * bs_blk, r)
+        krope_seq = krope_stack[lidx, tables].reshape(b, w * bs_blk, pr)
+        q_lat = jnp.einsum("bsnh,rnh->bsnr", q_nope, p["w_uk"])
+        logits = (
+            jnp.einsum("bsnr,btr->bnst", q_lat, ckv_seq,
+                       preferred_element_type=jnp.float32)
+            + jnp.einsum("bsnh,bth->bnst", q_rope, krope_seq,
+                         preferred_element_type=jnp.float32)
+        ) * scale
+        valid = (jnp.arange(w * bs_blk)[None, :] <= pos[:, None])
+        logits = jnp.where(valid[:, None, None, :], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        o_lat = jnp.einsum("bnst,btr->bsnr", probs,
+                           ckv_seq.astype(jnp.float32)).astype(x.dtype)
+        out = jnp.einsum("bsnr,rnh->bsnh", o_lat, p["w_uv"])
+        new_cache = (ckv_stack, krope_stack)
     else:
         ckv_cache, krope_cache, pos = layer_cache  # (B,Smax,r), (B,Smax,pr)
         t = ckv_cache.shape[1]

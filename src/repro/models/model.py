@@ -38,19 +38,52 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=None):
     return _family_mod(cfg).init_cache(cfg, batch, max_seq, dtype)
 
 
+def cache_family(cfg) -> str | None:
+    """Resolve the cache family (a ``serving.kvcache.FAMILIES`` key) this
+    config pages under, or None when nothing resolves.  A declared
+    ``cfg.cache_family`` always wins; only plain GQA-shaped stacks derive
+    one implicitly — there is NO silent dense fallback for the rest."""
+    mod = _family_mod(cfg)
+    return getattr(mod, "cache_family", lambda _cfg: None)(cfg)
+
+
 def supports_paged(cfg) -> bool:
-    """True when the family can run its decode cache in block-pool form
-    (``init_paged_cache`` + a ``block_tables`` decode cache)."""
+    """True when the family can run its decode cache in pooled form
+    (``init_paged_cache`` + a block-table / slab-id decode cache)."""
     mod = _family_mod(cfg)
     return getattr(mod, "supports_paged", lambda _cfg: False)(cfg)
 
 
-def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
-    """Block-pool decode cache: per layer, k/v pools of shape
-    (num_blocks, block_size, n_kv, head_dim) shared by all sequences; the
-    caller owns block tables and lengths (see serving/kvcache.py)."""
-    return _family_mod(cfg).init_paged_cache(cfg, num_blocks, block_size,
-                                             dtype)
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None, *,
+                     num_slabs: int = 0, num_segments: int = 0):
+    """Pooled decode cache for the resolved cache family: block pools
+    (num_blocks, block_size, ...) for attention KV, state-slab pools
+    (num_slabs, ...) for SSM layers, and shared read-only segment pools
+    (num_segments, ...) for enc-dec cross KV; the caller owns block
+    tables, slab/segment ids, and lengths (see serving/kvcache.py)."""
+    return _family_mod(cfg).init_paged_cache(
+        cfg, num_blocks, block_size, dtype, num_slabs=num_slabs,
+        num_segments=num_segments)
+
+
+def paged_pool_kinds(cfg) -> dict[str, str]:
+    """Pools-dict key -> "block" | "slab" | "segment" — the engine's map
+    for generic staging, export/import, and the per-kind leak probe."""
+    return _family_mod(cfg).paged_pool_kinds(cfg)
+
+
+def paged_insert_views(cfg, prefill_cache) -> dict:
+    """Prefill-cache leaves rearranged to match the ``init_paged_cache``
+    pools structure ((Laxis, B, ...) per leaf) for the engine's generic
+    insert scatter."""
+    mod = _family_mod(cfg)
+    if hasattr(mod, "paged_insert_views"):
+        return mod.paged_insert_views(cfg, prefill_cache)
+    views = {"layers": prefill_cache["layers"]}
+    if "first_layers" in prefill_cache:
+        views["first_layers"] = jax.tree.map(
+            lambda *xs: jnp.stack(xs), *prefill_cache["first_layers"])
+    return views
 
 
 def apply(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,

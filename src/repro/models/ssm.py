@@ -171,6 +171,11 @@ def mamba2_block(cfg, p: Params, x, *, layer_cache=None, chunk: int | None = Non
     Training/prefill: layer_cache None (or 'build' via cache arg semantics of
     callers — here we always return (out, cache_tuple or None)).
     Decode: layer_cache = (conv_cache (B,W-1,C), state (B,H,P,N), pos).
+    Slab-paged decode: layer_cache = (conv_stack (Lm,NS,W-1,C), state_stack
+    (Lm,NS,H,P,N) fp32, lidx, slabs (B,) int32) — the constant-size per-
+    stream state lives in a SLAB pool shared by all rows; each row gathers
+    its slab, steps the recurrence, and scatters the slab back (state never
+    grows, so "paging" is pure slot indirection, no block tables).
     """
     b, s, d = x.shape
     d_in = cfg.d_inner
@@ -202,8 +207,14 @@ def mamba2_block(cfg, p: Params, x, *, layer_cache=None, chunk: int | None = Non
             conv_tail = xBC  # caller may slice the tail for cache build
         y = y.reshape(b, s, d_in)
     else:
-        conv_cache, state, pos = layer_cache  # (B,W-1,C), (B,H,P,N)
-        win = jnp.concatenate([conv_cache, xBC], axis=1)  # (B,W,C)
+        paged = len(layer_cache) == 4
+        if paged:
+            conv_stack, state_stack, lidx, slabs = layer_cache
+            conv_cache = conv_stack[lidx, slabs]  # (B,W-1,C)
+            state = state_stack[lidx, slabs]  # (B,H,P,N) fp32
+        else:
+            conv_cache, state, pos = layer_cache  # (B,W-1,C), (B,H,P,N)
+        win = jnp.concatenate([conv_cache.astype(xBC.dtype), xBC], axis=1)
         conv_out = jnp.einsum("bwc,wc->bc", win, p["conv_w"]) + p["conv_b"]
         xBC_t = jax.nn.silu(conv_out)[:, None, :]  # (B,1,C)
         xs, B, C = jnp.split(xBC_t[:, 0], [d_in, d_in + g * n], axis=-1)
@@ -213,16 +224,30 @@ def mamba2_block(cfg, p: Params, x, *, layer_cache=None, chunk: int | None = Non
         y, state = ssd_decode_step(state, xs, dt[:, 0], A, B, C)
         y = y + xs * p["ssm_D"].astype(xs.dtype)[None, :, None]
         y = y.reshape(b, 1, d_in)
-        new_cache = (win[:, 1:, :], state)
+        if paged:
+            conv_stack = conv_stack.at[lidx, slabs].set(
+                win[:, 1:, :].astype(conv_stack.dtype))
+            state_stack = state_stack.at[lidx, slabs].set(state)
+            new_cache = (conv_stack, state_stack)
+        else:
+            new_cache = (win[:, 1:, :], state)
 
     y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
     return shd.shard_hidden(out), new_cache
 
 
-def prefill_mamba_cache(cfg, p: Params, x, dt_unused=None):
+def prefill_mamba_cache(cfg, p: Params, x, dt_unused=None, *, lengths=None):
     """Run the block in training mode AND build the decode cache: returns
-    (out, (conv_cache, state))."""
+    (out, (conv_cache, state)).
+
+    ``lengths`` (B,) int32 makes a PADDED (length-bucketed) prefill exact:
+    dt is forced to 0 past each row's true length, so padded positions
+    contribute identity decay (exp(0) = 1) and a zero input term — the
+    final state equals the state at the true length — and the conv tail is
+    gathered per row ending at its true length instead of at the padded
+    end.  ``lengths=None`` keeps the exact-length single-sequence path
+    bit-identical to before."""
     b, s, d = x.shape
     d_in = cfg.d_inner
     h = cfg.ssm_nheads
@@ -232,6 +257,9 @@ def prefill_mamba_cache(cfg, p: Params, x, dt_unused=None):
 
     z, xBC_raw, dt = _in_projections(cfg, p, x)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if lengths is not None:
+        valid = jnp.arange(s)[None, :] < lengths[:, None]  # (B,S)
+        dt = jnp.where(valid[..., None], dt, 0.0)
     A = -jnp.exp(p["A_log"])
     xBC = jax.nn.silu(_causal_conv(xBC_raw, p["conv_w"], p["conv_b"]))
     xs, B, C = jnp.split(xBC, [d_in, d_in + g * n], axis=-1)
@@ -249,6 +277,16 @@ def prefill_mamba_cache(cfg, p: Params, x, dt_unused=None):
     y = rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
     out = jnp.einsum("bse,ed->bsd", y, p["out_proj"])
     w = cfg.conv_width
-    conv_cache = xBC_raw[:, -(w - 1):, :] if s >= w - 1 else jnp.pad(
-        xBC_raw, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    if lengths is None:
+        conv_cache = xBC_raw[:, -(w - 1):, :] if s >= w - 1 else jnp.pad(
+            xBC_raw, ((0, 0), (w - 1 - s, 0), (0, 0)))
+    else:
+        # per-row tail: the W-1 raw conv inputs ENDING at each true length
+        # (front-pad with W-1 zeros so short rows read zeros, exactly what
+        # the causal conv saw)
+        padded = jnp.pad(xBC_raw, ((0, 0), (w - 1, 0), (0, 0)))
+        conv_cache = jax.vmap(
+            lambda row, ln: jax.lax.dynamic_slice_in_dim(row, ln, w - 1,
+                                                         axis=0)
+        )(padded, lengths)
     return shd.shard_hidden(out), (conv_cache, final)

@@ -88,14 +88,18 @@ def init_params(cfg, key):
 
 
 def block(cfg, p, x, *, positions, mrope_positions=None, mode: str,
-          layer_cache=None, use_moe: bool):
-    """One transformer block.  Returns (x, new_layer_cache, aux_loss)."""
+          layer_cache=None, use_moe: bool, lengths=None):
+    """One transformer block.  Returns (x, new_layer_cache, aux_loss).
+    ``lengths`` (B,) are the true per-row prompt lengths of a padded
+    (bucketed) prefill — only the SSM prefill needs them (its recurrent
+    state is polluted by pad positions unless dt is masked)."""
     kind = _mixer_kind(cfg)
     aux = jnp.zeros((), jnp.float32)
     h = L.rms_norm(x, p["ln1"]["scale"], cfg.norm_eps)
     if kind == "mamba":
         if mode == "prefill":
-            out, new_cache = S.prefill_mamba_cache(cfg, p["mamba"], h)
+            out, new_cache = S.prefill_mamba_cache(cfg, p["mamba"], h,
+                                                   lengths=lengths)
         else:
             out, new_cache = S.mamba2_block(cfg, p["mamba"], h,
                                             layer_cache=layer_cache)
@@ -155,34 +159,85 @@ def init_cache(cfg, batch: int, max_seq: int, dtype=None):
     return cache
 
 
+def cache_family(cfg) -> str | None:
+    """Resolve the cache family this stack pages under (a key into
+    ``serving.kvcache.FAMILIES``).  A declared ``cfg.cache_family`` wins;
+    otherwise only plain GQA-shaped stacks (gqa/vlm attention) derive a
+    family — everything else must declare or gets None (NO silent dense
+    fallback: the engine refuses paged mode rather than guessing)."""
+    if getattr(cfg, "cache_family", ""):
+        return cfg.cache_family
+    if cfg.family in ("encdec", "hybrid"):
+        return None
+    return "gqa" if _mixer_kind(cfg) == "gqa" else None
+
+
 def supports_paged(cfg) -> bool:
-    """Families whose decode cache can run in block-pool form: plain GQA
-    stacks without non-uniform prefix layers.  (MLA latent pools and SSM
-    state caches are follow-ups; hybrid/encdec mix cache kinds per layer.)"""
-    n_first = cfg.first_dense_layers if cfg.is_moe else 0
-    return (_mixer_kind(cfg) == "gqa" and n_first == 0
-            and cfg.family not in ("encdec", "hybrid"))
+    """Stacks whose decode cache can run in pooled form: GQA k/v block
+    pools, MLA latent block pools (smaller rows, same tables), and SSM
+    state-slab pools.  Non-uniform MoE prefix layers ride along as an
+    extra pool with their own leading axis."""
+    return cache_family(cfg) in ("gqa", "mla", "ssm")
 
 
-def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None):
-    """Zero block-pool decode cache: per scanned layer, k/v pools of shape
-    (num_blocks, block_size, n_kv, head_dim).  Block tables and per-row
-    lengths are NOT part of this pytree — the serving engine passes them per
-    decode call (they change every step; the pool doesn't)."""
+def init_paged_cache(cfg, num_blocks: int, block_size: int, dtype=None, *,
+                     num_slabs: int = 0, num_segments: int = 0):
+    """Zero pooled decode cache, keyed to match :func:`paged_pool_kinds`:
+
+      gqa  — ``layers``: (k, v) pools (L, NB, BS, n_kv, head_dim)
+      mla  — ``layers``: (c_kv, k_rope) pools (L, NB, BS, r) / (L, NB, BS,
+             rope_dim); MoE prefix layers add ``first_layers`` with their
+             own leading axis
+      ssm  — ``layers``: (conv, state) SLAB pools (L, NS, W-1, C) /
+             (L, NS, H, P, N) fp32 — constant-size, one slab per stream
+
+    Block tables / slab ids and per-row lengths are NOT part of this
+    pytree — the serving engine passes them per decode call (they change
+    every step; the pool doesn't)."""
+    fam = cache_family(cfg)
     if not supports_paged(cfg):
         raise NotImplementedError(
             f"paged decode cache unsupported for family={cfg.family!r} "
             f"attn_type={cfg.attn_type!r}")
     dtype = dtype or jnp.dtype(cfg.dtype)
-    n_scan = cfg.num_layers
+    n_first = cfg.first_dense_layers if cfg.is_moe else 0
+    n_scan = cfg.num_layers - n_first
 
     def one_layer():
+        if fam == "ssm":
+            return (
+                jnp.zeros((num_slabs, cfg.conv_width - 1, S.conv_dim(cfg)),
+                          dtype),
+                jnp.zeros((num_slabs, cfg.ssm_nheads, cfg.ssm_head_dim,
+                           cfg.ssm_state_dim), jnp.float32),
+            )
+        if fam == "mla":
+            return (
+                jnp.zeros((num_blocks, block_size, cfg.kv_lora_rank), dtype),
+                jnp.zeros((num_blocks, block_size, cfg.qk_rope_head_dim),
+                          dtype),
+            )
         shape = (num_blocks, block_size, cfg.num_kv_heads, cfg.head_dim)
         return (jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
 
-    stack = jax.tree.map(lambda a: jnp.broadcast_to(a, (n_scan, *a.shape)),
-                         one_layer())
-    return {"layers": stack}
+    def stack(n):
+        return jax.tree.map(lambda a: jnp.broadcast_to(a, (n, *a.shape)),
+                            one_layer())
+
+    pools = {"layers": stack(n_scan)}
+    if n_first:
+        pools["first_layers"] = stack(n_first)
+    return pools
+
+
+def paged_pool_kinds(cfg) -> dict[str, str]:
+    """Pool-kind map for the engine's generic staging/migration: pools-dict
+    key -> "block" | "slab" | "segment"."""
+    kind = "slab" if cache_family(cfg) == "ssm" else "block"
+    kinds = {"layers": kind}
+    if cfg.is_moe and cfg.first_dense_layers:
+        kinds["first_layers"] = kind
+    return kinds
 
 
 def _shard_cache(cfg, cache):
@@ -244,39 +299,59 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
     aux_total = jnp.zeros((), jnp.float32)
     new_cache = {"pos": None} if mode != "train" else None
 
+    paged = mode == "decode" and cache is not None and (
+        "block_tables" in cache or "slab_ids" in cache)
+    prefill_lengths = None
+    if mode == "prefill" and batch.get("lengths") is not None:
+        prefill_lengths = jnp.asarray(batch["lengths"], jnp.int32)
+
     # -- prefix (non-scanned) layers ------------------------------------
     first_caches = []
+    first_pools = cache.get("first_layers") if paged else None
     for i in range(n_first):
-        lc = cache["first_layers"][i] + (cache["pos"],) if mode == "decode" else None
+        if paged:
+            # prefix pools carry their own leading axis; lidx selects it
+            lc = first_pools + (jnp.int32(i), cache["block_tables"],
+                                cache["pos"])
+        elif mode == "decode":
+            lc = cache["first_layers"][i] + (cache["pos"],)
+        else:
+            lc = None
         x, c, aux = block(cfg, params["first_layers"][i], x,
                           positions=positions, mrope_positions=mrope_positions,
-                          mode=mode, layer_cache=lc, use_moe=False)
+                          mode=mode, layer_cache=lc, use_moe=False,
+                          lengths=prefill_lengths)
         aux_total += aux
-        first_caches.append(c)
+        if paged:
+            first_pools = c
+        else:
+            first_caches.append(c)
 
     # -- scanned stack ---------------------------------------------------
-    paged = mode == "decode" and cache is not None and "block_tables" in cache
-
     if paged:
         # the pool stacks ride the scan as CARRY (not xs/ys): each layer
-        # scatters one row and gathers W blocks in place, so the scan never
-        # materializes a copy of the whole pool — per-step cost tracks the
-        # live rows' work, not pool capacity
+        # scatters one row (or slab) and gathers its live window in place,
+        # so the scan never materializes a copy of the whole pool —
+        # per-step cost tracks the live rows' work, not pool capacity
+        kind = _mixer_kind(cfg)
+
         def paged_body(carry, lp):
-            x, aux_acc, k_stack, v_stack, lidx = carry
-            lc = (k_stack, v_stack, lidx, cache["block_tables"],
-                  cache["pos"])
-            x, (k_stack, v_stack), aux = block(
+            x, aux_acc, p0, p1, lidx = carry
+            if kind == "mamba":
+                lc = (p0, p1, lidx, cache["slab_ids"])
+            else:  # gqa / mla block pools share the table indirection
+                lc = (p0, p1, lidx, cache["block_tables"], cache["pos"])
+            x, (p0, p1), aux = block(
                 cfg, lp, x, positions=positions,
                 mrope_positions=mrope_positions, mode=mode, layer_cache=lc,
                 use_moe=cfg.is_moe)
-            return (x, aux_acc + aux, k_stack, v_stack, lidx + 1), None
+            return (x, aux_acc + aux, p0, p1, lidx + 1), None
 
-        k_stack, v_stack = cache["layers"]
-        carry = (x, aux_total, k_stack, v_stack, jnp.int32(0))
-        (x, aux_total, k_stack, v_stack, _), _ = jax.lax.scan(
+        p0, p1 = cache["layers"]
+        carry = (x, aux_total, p0, p1, jnp.int32(0))
+        (x, aux_total, p0, p1, _), _ = jax.lax.scan(
             paged_body, carry, params["layers"])
-        layer_caches = (k_stack, v_stack)
+        layer_caches = (p0, p1)
     else:
         def body(carry, inp):
             x, aux_acc = carry
@@ -287,7 +362,8 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
                 lp, lc = inp, None
             x, c, aux = block(cfg, lp, x, positions=positions,
                               mrope_positions=mrope_positions, mode=mode,
-                              layer_cache=lc, use_moe=cfg.is_moe)
+                              layer_cache=lc, use_moe=cfg.is_moe,
+                              lengths=prefill_lengths)
             return (x, aux_acc + aux), c
 
         body_fn = body
@@ -306,14 +382,13 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
         return logits, None, aux_total
     out_cache = {"layers": layer_caches, "pos": None}
     if n_first:
-        out_cache["first_layers"] = first_caches
+        out_cache["first_layers"] = first_pools if paged else first_caches
     if mode == "prefill":
         # per-row true lengths: bucketed prefill batching pads same-bucket
         # prompts to a common length; rows past ``lengths[b]`` hold padding
         # KV that decode masks (and progressively overwrites)
-        lengths = batch.get("lengths")
-        out_cache["pos"] = (jnp.asarray(lengths, jnp.int32) if lengths
-                            is not None else jnp.full((b,), s, jnp.int32))
+        out_cache["pos"] = (prefill_lengths if prefill_lengths is not None
+                            else jnp.full((b,), s, jnp.int32))
         kind = _mixer_kind(cfg)
         if kind in ("gqa", "mla"):
             out_cache = _pad_prefill_cache(cfg, out_cache, batch.get("max_seq", s))
@@ -321,7 +396,9 @@ def forward(cfg, params, batch, *, mode: str, cache=None, remat: bool = False,
         out_cache["pos"] = cache["pos"] + 1
         if paged:
             # pools are not (L,B,S,...)-shaped; sharding rules don't apply
-            out_cache["block_tables"] = cache["block_tables"]
+            for k in ("block_tables", "slab_ids"):
+                if k in cache:
+                    out_cache[k] = cache[k]
             return logits, out_cache, aux_total
     return logits, _shard_cache(cfg, out_cache), aux_total
 

@@ -68,7 +68,8 @@ from repro.core.faults import ServerFailedError, StreamShedError
 from repro.core.task_model import GpuSegment, Task
 from repro.models import model as M
 from repro.runtime.straggler import DeadlineAwarePolicy, StepTimeWatchdog
-from repro.serving.kvcache import OutOfBlocksError, PagedKVCacheManager
+from repro.serving.kvcache import (FAMILIES, OutOfBlocksError,
+                                   PagedKVCacheManager)
 
 
 def _pow2ceil(n: int) -> int:
@@ -171,25 +172,39 @@ class _SlotState:
 
 
 class _PagedState:
-    """Per-server paged-KV state: the host-side block allocator plus the
-    device block pools.  ``mgr``/``lock`` are touched from client threads at
-    job start/end; ``pools`` and the staging buffers only ever from the
-    server's own thread (serialized with its batches)."""
+    """Per-server paged-cache state: the host-side allocator (blocks, state
+    slabs, shared segments — whichever kinds the cache family uses) plus the
+    device pools.  ``mgr``/``lock`` are touched from client threads at job
+    start/end; ``pools`` and the staging buffers only ever from the server's
+    own thread (serialized with its batches)."""
 
     def __init__(self, cfg, num_blocks: int, block_size: int, max_batch: int,
-                 max_seq: int):
+                 max_seq: int, *, family: str = "gqa", num_slabs: int = 0,
+                 num_segments: int = 0):
+        self.family = FAMILIES[family]
         self.mgr = PagedKVCacheManager(num_blocks=num_blocks,
-                                       block_size=block_size)
+                                       block_size=block_size,
+                                       num_slabs=num_slabs,
+                                       num_segments=num_segments,
+                                       family=family)
         self.lock = threading.Lock()
-        self.nb_max = max_seq // block_size  # table width covering max_seq
-        # one block is held back as the scratch target for padded scatter
-        # lanes (insert tables shorter than nb_max); nothing ever reads it
-        self.scratch_block = self.mgr.allocate("__scratch__", 1)[0]
-        self.pools = None  # lazily built {"layers": ...} block pools
+        # table width covering max_seq (0 for slab-only families)
+        self.nb_max = max_seq // block_size if self.family.uses_blocks else 0
+        # one resource of EACH kind the family uses is held back as the
+        # scratch target for padded scatter lanes / unused packed columns;
+        # nothing ever reads scratch content
+        self.mgr.allocate("__scratch__", 1)
+        scratch = self.mgr.seqs["__scratch__"]
+        self.scratch_block = scratch.blocks[0] if scratch.blocks else 0
+        self.scratch_slab = scratch.slab if scratch.slab is not None else 0
+        self.scratch_seg = (scratch.segment if scratch.segment is not None
+                            else 0)
+        self.pools = None  # lazily built pools dict (family layout)
         # preallocated staging for the compacted decode batch, packed into
         # ONE int32 array so each step pays a single host->device transfer:
-        # row = [token, length, block_table...]
-        self.pack_scratch = np.zeros((max_batch, 2 + self.nb_max), np.int32)
+        # row = [token, length, slab, segment, block_table...] — a uniform
+        # header across families; unused columns carry scratch ids
+        self.pack_scratch = np.zeros((max_batch, 4 + self.nb_max), np.int32)
 
 
 class ServeEngine:
@@ -211,12 +226,26 @@ class ServeEngine:
                              "pools are the batched decode cache layout)")
         if paged and not M.supports_paged(cfg):
             raise ValueError(f"paged decode unsupported for {cfg.family}/"
-                             f"{cfg.attn_type}; use paged=False")
-        if paged and max_seq % kv_block_size:
+                             f"{cfg.attn_type}; use paged=False (declare a "
+                             "cache_family to enable the paged path)")
+        # pool kinds the model's cache family uses ({} when not paged):
+        # "block" -> growable KV block pool, "slab" -> fixed-size state slab,
+        # "segment" -> refcounted read-only shared segment
+        self._pool_kinds = M.paged_pool_kinds(cfg) if paged else {}
+        self._cache_kinds = set(self._pool_kinds.values())
+        if paged and "block" in self._cache_kinds and max_seq % kv_block_size:
             raise ValueError(f"max_seq={max_seq} must be a multiple of "
                              f"kv_block_size={kv_block_size} for the paged "
                              "layout")
         self.paged = paged
+        # family-tagged cost-model phases: GQA keeps the untagged names
+        # (back-compat with every recorded cell); other families get their
+        # own fit groups so one family's timing never pollutes another's
+        self._family = (M.cache_family(cfg) or "gqa") if paged else "gqa"
+        _tag = "" if self._family == "gqa" else "@" + self._family
+        self._decode_kind = "decode" + _tag
+        self._prefill_kind = "prefill" + _tag
+        self._migrate_kind = "migrate" + _tag
         self.kv_block_size = kv_block_size
         self.pool = ServerPool(num_servers, ordering=ordering,
                                batching=batching, max_batch=max_batch,
@@ -276,17 +305,34 @@ class ServeEngine:
             self._insert_jit = jax.jit(self._insert_impl)
             self._decode_masked = jax.jit(self._decode_masked_impl)
         if self.paged:
-            blocks_per_seq = max_seq // kv_block_size
-            # default pool: every slot can hold a max_seq sequence, plus the
-            # scratch block
-            num_blocks = kv_blocks or (max_batch * blocks_per_seq + 1)
-            self._num_blocks = num_blocks  # for elastically-added servers
+            uses_blocks = "block" in self._cache_kinds
+            blocks_per_seq = max_seq // kv_block_size if uses_blocks else 0
+            # default block pool: every slot can hold a max_seq sequence,
+            # plus the scratch block (slab-only families carry no blocks)
+            num_blocks = (kv_blocks or (max_batch * blocks_per_seq + 1)
+                          if uses_blocks else 0)
+            # slabs: one per slot, doubled so an in-flight migration can
+            # hold src+dst at once, plus scratch; segments: shared across
+            # slots (refcounted) so max_batch distinct keys + scratch cover
+            # the worst case
+            num_slabs = (2 * max_batch + 2
+                         if "slab" in self._cache_kinds else 0)
+            num_segments = (max_batch + 2
+                            if "segment" in self._cache_kinds else 0)
+            # remembered for elastically-added servers
+            self._num_blocks = num_blocks
+            self._num_slabs = num_slabs
+            self._num_segments = num_segments
             self._paged = [
                 _PagedState(cfg, num_blocks, kv_block_size, max_batch,
-                            max_seq)
+                            max_seq, family=self._family,
+                            num_slabs=num_slabs, num_segments=num_segments)
                 for _ in range(num_servers)
             ]
-            self.width_buckets = _pow2_ladder(self._paged[0].nb_max)
+            # slab-only families have no gather width: the single 0 bucket
+            # keeps every bucket_up() call well-defined
+            self.width_buckets = (_pow2_ladder(self._paged[0].nb_max)
+                                  if uses_blocks else (0,))
             # the pools argument is donated in both jits: pool updates must
             # alias, not copy — the pool is owned by the server thread and
             # immediately replaced by the call's output
@@ -387,8 +433,8 @@ class ServeEngine:
 
         self.prefill_buckets = autotune_buckets(
             lengths or [1], _pow2_ladder(self.max_seq),
-            max_buckets=max_buckets, cost_of=priced("prefill", 1))
-        if self.paged:
+            max_buckets=max_buckets, cost_of=priced(self._prefill_kind, 1))
+        if self.paged and self._paged[0].nb_max:
             bs = self.kv_block_size
             nb_max = self._paged[0].nb_max
             # widths are driven by each stream's FINAL length (the widest
@@ -397,10 +443,10 @@ class ServeEngine:
                      for l in lengths] or [1]
             wmodel = None
             if model is not None:
-                probe = model.predict("decode", 1, nb_max)
+                probe = model.predict(self._decode_kind, 1, nb_max)
                 if math.isfinite(probe):
                     wmodel = lambda bucket, value: model.predict(
-                        "decode", 1, bucket)
+                        self._decode_kind, 1, bucket)
             self.width_buckets = autotune_buckets(
                 needs, _pow2_ladder(nb_max), max_buckets=max_buckets,
                 cost_of=wmodel)
@@ -431,31 +477,37 @@ class ServeEngine:
         if not self.paged:
             raise ValueError("static_cell_costs requires paged=True")
         if cells is None:
-            cells = [("migrate", w, self.kv_block_size)
+            cells = [(self._migrate_kind, w, self.kv_block_size)
                      for w in self.width_buckets]
         pools = jax.eval_shape(
             lambda: M.init_paged_cache(self.cfg, self._num_blocks,
-                                       self.kv_block_size))
+                                       self.kv_block_size,
+                                       num_slabs=self._num_slabs,
+                                       num_segments=self._num_segments))
 
         def cost_of(lowered) -> tuple[float, float]:
             c = hlo_cost.analyze_text(lowered.compile().as_text())
             return (c.flops, c.hbm_bytes)
 
         out: dict[tuple, tuple[float, float]] = {}
+        idx = jax.ShapeDtypeStruct((), jnp.int32)
         for cell in cells:
             phase, a, b = cell
-            if phase == "migrate":
+            base = phase.split("@", 1)[0]  # family-tagged phases price alike
+            if base == "migrate":
                 table = jax.ShapeDtypeStruct((a,), jnp.int32)
-                packed = jax.eval_shape(self._export_kv_impl, pools, table)
-                fg, bg = cost_of(self._export_kv.lower(pools, table))
+                packed = jax.eval_shape(self._export_kv_impl, pools, table,
+                                        idx, idx)
+                fg, bg = cost_of(self._export_kv.lower(pools, table, idx,
+                                                       idx))
                 fs, bs = cost_of(self._import_kv.lower(pools, packed,
-                                                       table))
+                                                       table, idx, idx))
                 out[cell] = (fg + fs, bg + bs)
-            elif phase == "decode":
-                packed = jax.ShapeDtypeStruct((a, 2 + b), jnp.int32)
+            elif base == "decode":
+                packed = jax.ShapeDtypeStruct((a, 4 + b), jnp.int32)
                 out[cell] = cost_of(
                     self._decode_paged.lower(self.params, packed, pools))
-            elif phase == "prefill":
+            elif base == "prefill":
                 batch = self._prefill_batch(np.zeros((a, b), np.int32))
                 batch["lengths"] = jnp.ones((a,), jnp.int32)
                 out[cell] = cost_of(self._prefill.lower(self.params, batch))
@@ -543,63 +595,98 @@ class ServeEngine:
 
         return run
 
-    # -- batched decode internals (paged block-pool layout) ----------------
-    def _insert_paged_impl(self, pools, cache, src_row, table):
-        """Scatter row ``src_row`` of a prefill cache (padded to max_seq)
-        into the block pools at ``table`` (nb_max entries; lanes past the
-        sequence's reserved blocks point at the scratch block and carry
-        all-zero rows, so duplicate scatter lanes stay deterministic)."""
-        bs = self.kv_block_size
+    # -- batched decode internals (paged pool layouts, family-generic) -----
+    def _make_pools(self, state):
+        return M.init_paged_cache(self.cfg, state.mgr.num_blocks,
+                                  state.mgr.block_size,
+                                  num_slabs=state.mgr.num_slabs,
+                                  num_segments=state.mgr.num_segments)
 
-        def one(pool, leaf):
-            # leaf (L, B, max_seq, nkv, hd) -> rows (L, nb_max, bs, nkv, hd)
+    def _insert_paged_impl(self, pools, cache, src_row, table, slab, seg):
+        """Scatter row ``src_row`` of a prefill cache into the pools,
+        dispatched per pool kind: "block" entries land at ``table`` (nb_max
+        entries; lanes past the sequence's reserved blocks point at the
+        scratch block and carry all-zero rows, so duplicate scatter lanes
+        stay deterministic); "slab" entries land in row ``slab``; "segment"
+        entries in row ``seg`` (shared segments — re-staging an
+        already-present key rewrites identical content, idempotent)."""
+        bs = self.kv_block_size
+        views = M.paged_insert_views(self.cfg, cache)
+
+        def block_one(pool, leaf):
+            # leaf (L, B, max_seq, ...) -> rows (L, nb_max, bs, ...)
             rows = jax.lax.dynamic_index_in_dim(leaf, src_row, axis=1,
                                                 keepdims=False)
             rows = rows.reshape(leaf.shape[0], -1, bs, *leaf.shape[3:])
             return pool.at[:, table].set(rows.astype(pool.dtype))
 
-        return {"layers": jax.tree.map(one, pools["layers"], cache["layers"])}
+        def row_one(idx):
+            def f(pool, leaf):
+                row = jax.lax.dynamic_index_in_dim(leaf, src_row, axis=1,
+                                                   keepdims=True)
+                return jax.lax.dynamic_update_slice_in_dim(
+                    pool, row.astype(pool.dtype), idx, axis=1)
+            return f
+
+        out = {}
+        for key, kind in self._pool_kinds.items():
+            one = (block_one if kind == "block"
+                   else row_one(slab if kind == "slab" else seg))
+            out[key] = jax.tree.map(one, pools[key], views[key])
+        return out
 
     def _decode_paged_impl(self, params, packed, pools):
-        """One compacted paged decode step.  ``packed`` (n, 2+W) int32 rows
-        are [token, length, block_table...]: the table width W addresses
-        only the gather the live rows need; rows scatter their new KV into
-        their own blocks (disjoint by construction — no masked merge).  The
-        pool buffers are DONATED by the caller: the update aliases in place
-        instead of copying the whole pool every token."""
-        tokens, lengths, tables = packed[:, :1], packed[:, 1], packed[:, 2:]
-        cache = {"layers": pools["layers"], "pos": lengths,
-                 "block_tables": tables}
+        """One compacted paged decode step.  ``packed`` (n, 4+W) int32 rows
+        are [token, length, slab, segment, block_table...] — a uniform
+        header across cache families; columns a family doesn't use carry
+        scratch ids and are never read.  The table width W addresses only
+        the gather the live rows need; rows scatter their new KV / state
+        into their own blocks/slabs (disjoint by construction — no masked
+        merge).  The pool buffers are DONATED by the caller: the update
+        aliases in place instead of copying the whole pool every token."""
+        tokens, lengths = packed[:, :1], packed[:, 1]
+        cache = dict(pools)
+        cache["pos"] = lengths
+        if "block" in self._cache_kinds:
+            cache["block_tables"] = packed[:, 4:]
+        if "slab" in self._cache_kinds:
+            cache["slab_ids"] = packed[:, 2]
+        if "segment" in self._cache_kinds:
+            cache["segment_ids"] = packed[:, 3]
         logits, new_cache, _ = M.apply(self.cfg, params, {"tokens": tokens},
                                        mode="decode", cache=cache)
-        return logits, {"layers": new_cache["layers"]}
+        return logits, {k: new_cache[k] for k in self._pool_kinds}
 
     def _insert_slot_paged(self, si: int, cache, src_row: int,
-                           table: np.ndarray) -> None:
+                           table: np.ndarray, slab: int = 0,
+                           seg: int = 0) -> None:
         """Runs on server ``si``'s thread (serialized with its batches)."""
         state = self._paged[si]
         if state.pools is None:
-            state.pools = M.init_paged_cache(self.cfg, state.mgr.num_blocks,
-                                             state.mgr.block_size)
+            state.pools = self._make_pools(state)
         state.pools = jax.block_until_ready(
             self._insert_paged_jit(state.pools, cache, jnp.int32(src_row),
-                                   jnp.asarray(table)))
+                                   jnp.asarray(table), jnp.int32(slab),
+                                   jnp.int32(seg)))
 
     def _run_paged_decode(self, si: int):
         """run_batch callable for server ``si`` (paged): payloads are
-        (token, block_table, length) triples.  Slot compaction + length
-        bucketing happen here: only the live rows enter the device call
-        (padded to the next power of two by duplicating row 0 — duplicate
-        scatter lanes write identical values, so padding is idempotent), and
-        the block-table gather is truncated to the power-of-two width that
-        covers the longest live row."""
+        (token, block_table, length, slab, segment) tuples.  Slot compaction
+        + length bucketing happen here: only the live rows enter the device
+        call (padded to the next power of two by duplicating row 0 —
+        duplicate scatter lanes write identical values and slabs are
+        per-row-owned, so padding is idempotent), and the block-table gather
+        is truncated to the power-of-two width that covers the longest live
+        row (0 for slab-only families: no gather axis at all)."""
 
         def run(payloads):
             state = self._paged[si]
             bs = state.mgr.block_size
             n = len(payloads)
             n_pad = bucket_up(n, self._row_buckets)
-            need = max(-(-(length + 1) // bs) for _, _, length in payloads)
+            need = (max(-(-(length + 1) // bs)
+                        for _, _, length, _, _ in payloads)
+                    if state.nb_max else 0)
             w = bucket_up(need, self.width_buckets)
             # safe fallback: a cold cell mid-traffic would stall the server
             # behind XLA compilation, so bump to the cheapest WARM cell that
@@ -615,22 +702,24 @@ class ServeEngine:
                 else:
                     cold = True
             pack = state.pack_scratch
-            for i, (token, table, length) in enumerate(payloads):
+            for i, (token, table, length, slab, seg) in enumerate(payloads):
                 pack[i, 0] = token
                 pack[i, 1] = length
-                pack[i, 2:] = table
+                pack[i, 2] = slab
+                pack[i, 3] = seg
+                pack[i, 4:] = table
             for i in range(n, n_pad):  # idempotent padding rows
                 pack[i] = pack[0]
             t0 = time.monotonic()
             logits, state.pools = jax.block_until_ready(
                 self._decode_paged(self.params,
-                                   jnp.asarray(pack[:n_pad, : 2 + w]),
+                                   jnp.asarray(pack[:n_pad, : 4 + w]),
                                    state.pools))
             dt = time.monotonic() - t0
             if cold:  # now traced: later hits on this cell are warm
                 self._warm_decode.add((n_pad, w))
             self.pool.servers[si].record_meta(
-                kind="decode", rows=n, padded=n_pad, width=w,
+                kind=self._decode_kind, rows=n, padded=n_pad, width=w,
                 compacted=n_pad < self.max_batch, seconds=dt, cold=cold)
             rows = np.asarray(logits)[:, -1]
             return [rows[i] for i in range(n)]
@@ -638,10 +727,13 @@ class ServeEngine:
         return run
 
     def _paged_reserve(self, si: int, name: str, prompt_len: int,
-                       steps: int, bucket: int) -> tuple[str, np.ndarray]:
-        """Reserve every block the job will touch up front (reject early
+                       steps: int, bucket: int
+                       ) -> tuple[str, np.ndarray, int, int]:
+        """Reserve every resource the job will touch up front (reject early
         rather than stall mid-generation), including the bucketed-prefill
-        pad region, whose padding-token KV must land in owned blocks."""
+        pad region, whose padding-token KV must land in owned blocks.
+        Returns (seq_id, block table, slab id, segment id); kinds the
+        family doesn't use come back as the scratch ids."""
         state = self._paged[si]
         with self._kv_lock:
             self._seq_counter += 1
@@ -649,17 +741,25 @@ class ServeEngine:
         with state.lock:
             seq_id = f"{name}#{counter}"
             tokens = max(prompt_len + steps, bucket)
-            state.mgr.allocate(seq_id, prompt_len)
+            # enc-dec engine frontend stubs every stream's encoder frames
+            # as the same zeros (_prefill_batch), so all streams SHARE one
+            # cross-attention segment — the COW-dedup the segment pool is
+            # for.  Re-staging the shared key rewrites identical content.
+            state.mgr.allocate(seq_id, prompt_len, segment_key="__frames__")
             try:
                 state.mgr.extend(seq_id, tokens - prompt_len)
             except Exception:
                 state.mgr.free_seq(seq_id)
                 raise
-            blocks = state.mgr.seqs[seq_id].blocks
+            alloc = state.mgr.seqs[seq_id]
             table = np.full((state.nb_max,), state.scratch_block, np.int32)
-            table[: len(blocks)] = blocks
+            table[: len(alloc.blocks)] = alloc.blocks
+            slab = (alloc.slab if alloc.slab is not None
+                    else state.scratch_slab)
+            seg = (alloc.segment if alloc.segment is not None
+                   else state.scratch_seg)
         self._held.setdefault(name, set()).add((si, seq_id))
-        return seq_id, table
+        return seq_id, table, slab, seg
 
     def _paged_release(self, si: int, seq_id: str) -> None:
         name = seq_id.rsplit("#", 1)[0]
@@ -671,27 +771,45 @@ class ServeEngine:
             with state.lock:
                 state.mgr.free_seq(seq_id, missing_ok=True)
 
-    # -- live KV-block migration (steal / consolidate / elastic drain) -----
-    def _export_kv_impl(self, pools, table):
-        """Gather the blocks named by ``table`` out of every layer's pool
-        into one packed contiguous buffer — the single device->host
-        transfer of the migration.  Pad lanes point at the source scratch
-        block (never-read zeros), so the gather width can be pow2-bucketed
-        onto a precompiled cell."""
-        return {"layers": jax.tree.map(lambda pool: pool[:, table],
-                                       pools["layers"])}
+    # -- live cache migration (steal / consolidate / elastic drain) --------
+    def _export_kv_impl(self, pools, table, slab, seg):
+        """Gather one stream's live cache out of every pool into one packed
+        contiguous buffer — the single device->host transfer of the
+        migration.  Block kinds gather the blocks named by ``table`` (pad
+        lanes point at the source scratch block, never-read zeros, so the
+        gather width can be pow2-bucketed onto a precompiled cell); slab
+        and segment kinds gather their single row."""
+        out = {}
+        for key, kind in self._pool_kinds.items():
+            if kind == "block":
+                fn = lambda pool: pool[:, table]
+            else:
+                idx = slab if kind == "slab" else seg
+                fn = (lambda i: lambda pool:
+                      jax.lax.dynamic_slice_in_dim(pool, i, 1, axis=1))(idx)
+            out[key] = jax.tree.map(fn, pools[key])
+        return out
 
-    def _import_kv_impl(self, pools, packed, table):
-        """Scatter a packed export into the destination pools at ``table``
-        (the fresh blocks import_seq allocated; pad lanes target the
-        destination scratch block — duplicate scratch writes are benign,
-        nothing reads it).  Donated like the decode/insert pool updates."""
-
-        def one(pool, rows):
-            return pool.at[:, table].set(rows.astype(pool.dtype))
-
-        return {"layers": jax.tree.map(one, pools["layers"],
-                                       packed["layers"])}
+    def _import_kv_impl(self, pools, packed, table, slab, seg):
+        """Scatter a packed export into the destination pools: block rows
+        at ``table`` (the fresh blocks import_seq allocated; pad lanes
+        target the destination scratch block — duplicate scratch writes are
+        benign, nothing reads it), the slab row into the FRESH destination
+        slab, the segment row into the destination segment (idempotent when
+        the key was already resident there).  Donated like the
+        decode/insert pool updates."""
+        out = {}
+        for key, kind in self._pool_kinds.items():
+            if kind == "block":
+                fn = lambda pool, rows: pool.at[:, table].set(
+                    rows.astype(pool.dtype))
+            else:
+                idx = slab if kind == "slab" else seg
+                fn = (lambda i: lambda pool, rows:
+                      jax.lax.dynamic_update_slice_in_dim(
+                          pool, rows.astype(pool.dtype), i, axis=1))(idx)
+            out[key] = jax.tree.map(fn, pools[key], packed[key])
+        return out
 
     def _migrate_cell(self, n_blocks: int) -> tuple[int, bool]:
         """(padded gather width, cold?) for a migration of ``n_blocks`` —
@@ -707,9 +825,11 @@ class ServeEngine:
         return w, cold
 
     def _execute_migration(self, name: str, seq_id: str, src_si: int,
-                           dst_si: int, prio: int) -> np.ndarray:
-        """Move ``seq_id``'s live blocks from server ``src_si`` to
-        ``dst_si``; returns the stream's new full-width block table.
+                           dst_si: int, prio: int):
+        """Move ``seq_id``'s live cache (blocks, state slab, shared
+        segment — whatever kinds its family uses) from server ``src_si``
+        to ``dst_si``; returns (new full-width block table, destination
+        slab id, destination segment id).
 
         Two-phase commit against ``remove()`` (satellite of the protocol in
         ``kvcache``'s docstring): under ``_mig_lock`` the destination
@@ -736,8 +856,21 @@ class ServeEngine:
                     f"stream {name!r} gone before migration")
             with src.lock:
                 exp = src.mgr.export_seq(seq_id)
+                src_alloc = src.mgr.seqs[seq_id]
+                src_slab = (src_alloc.slab if src_alloc.slab is not None
+                            else src.scratch_slab)
+                src_seg = (src_alloc.segment
+                           if src_alloc.segment is not None
+                           else src.scratch_seg)
             with dst.lock:
-                new_blocks = dst.mgr.import_seq(exp)  # OutOfBlocks -> clean
+                # OutOfBlocks -> clean: all-or-nothing across every kind
+                new_blocks = dst.mgr.import_seq(exp)
+                dst_alloc = dst.mgr.seqs[seq_id]
+                dst_slab = (dst_alloc.slab if dst_alloc.slab is not None
+                            else dst.scratch_slab)
+                dst_seg = (dst_alloc.segment
+                           if dst_alloc.segment is not None
+                           else dst.scratch_seg)
             held.add((dst_si, seq_id))
         try:
             n = len(exp.blocks)
@@ -750,10 +883,12 @@ class ServeEngine:
             def gather():
                 t0 = time.monotonic()
                 packed = jax.block_until_ready(
-                    self._export_kv(src.pools, jnp.asarray(src_table)))
+                    self._export_kv(src.pools, jnp.asarray(src_table),
+                                    jnp.int32(src_slab),
+                                    jnp.int32(src_seg)))
                 packed = jax.tree.map(np.asarray, packed)  # device -> host
                 self.pool.servers[src_si].record_meta(
-                    kind="migrate", rows=n, padded=w,
+                    kind=self._migrate_kind, rows=n, padded=w,
                     width=self.kv_block_size,
                     seconds=time.monotonic() - t0, cold=cold)
                 return packed
@@ -763,15 +898,16 @@ class ServeEngine:
 
             def scatter():
                 if dst.pools is None:
-                    dst.pools = M.init_paged_cache(
-                        self.cfg, dst.mgr.num_blocks, dst.mgr.block_size)
+                    dst.pools = self._make_pools(dst)
                 t0 = time.monotonic()
                 dst.pools = jax.block_until_ready(
                     self._import_kv(dst.pools,
                                     jax.tree.map(jnp.asarray, packed),
-                                    jnp.asarray(dst_table)))
+                                    jnp.asarray(dst_table),
+                                    jnp.int32(dst_slab),
+                                    jnp.int32(dst_seg)))
                 self.pool.servers[dst_si].record_meta(
-                    kind="migrate", rows=n, padded=w,
+                    kind=self._migrate_kind, rows=n, padded=w,
                     width=self.kv_block_size,
                     seconds=time.monotonic() - t0, cold=cold)
 
@@ -797,7 +933,7 @@ class ServeEngine:
         self.migrations_completed += 1
         full = np.full((dst.nb_max,), dst.scratch_block, np.int32)
         full[:n] = new_blocks
-        return full
+        return full, dst_slab, dst_seg
 
     # -- batched prefill (length-bucketed) ---------------------------------
     def _run_prefill_batch(self, si: int, bucket: int):
@@ -837,7 +973,7 @@ class ServeEngine:
             if cold:
                 self._warm_prefill.add((n_pad, bucket))
             self.pool.servers[si].record_meta(
-                kind="prefill", rows=n, padded=n_pad, bucket=bucket,
+                kind=self._prefill_kind, rows=n, padded=n_pad, bucket=bucket,
                 seconds=dt, cold=cold)
             rows = np.asarray(logits[np.arange(n), lens[:n] - 1], np.float32)
             return [(rows[i], cache, i) for i in range(n)]
@@ -880,14 +1016,16 @@ class ServeEngine:
             reachable_d = [(self.max_batch, 0)]
             fb_d = reachable_d[0]
         plan_d = [c for c in reachable_d
-                  if hot is None or c == fb_d or ("decode", *c) in hot]
+                  if hot is None or c == fb_d
+                  or (self._decode_kind, *c) in hot]
         todo_d = [c for c in plan_d if c not in self._warm_decode]
         buckets = sorted({bucket_up(b, self.prefill_buckets)
                           for b in prompt_buckets})
         reachable_p = [(r, b) for b in buckets for r in rows_ladder]
         fb_p = (rows_ladder[-1], buckets[-1]) if buckets else None
         plan_p = [c for c in reachable_p
-                  if hot is None or c == fb_p or ("prefill", *c) in hot]
+                  if hot is None or c == fb_p
+                  or (self._prefill_kind, *c) in hot]
         todo_p = [c for c in plan_p if c not in self._warm_prefill]
         # migration gather/scatter cells: one per width bucket (the traces
         # are cheap — pure gather/scatter, no model math), so a mid-traffic
@@ -896,7 +1034,7 @@ class ServeEngine:
         fb_m = reachable_m[-1] if reachable_m else None
         plan_m = [w for w in reachable_m
                   if hot is None or w == fb_m
-                  or ("migrate", w, self.kv_block_size) in hot]
+                  or (self._migrate_kind, w, self.kv_block_size) in hot]
         todo_m = [w for w in plan_m if w not in self._warm_migrate]
         for si in range(len(self.pool.servers)):
             # traces are shared: run the compile plan on server 0 only;
@@ -927,24 +1065,28 @@ class ServeEngine:
         if self.paged:
             state = self._paged[si]
             if state.pools is None:
-                state.pools = M.init_paged_cache(
-                    self.cfg, state.mgr.num_blocks, state.mgr.block_size)
+                state.pools = self._make_pools(state)
             for rows, w in decode_cells:
-                # dummy batch: every row scatters token 0 at offset 0
-                # of the scratch block (idempotent duplicates)
-                pack = np.zeros((rows, 2 + w), np.int32)
-                pack[:, 2:] = state.scratch_block
+                # dummy batch: every row scatters token 0 at offset 0 of
+                # the scratch block/slab (idempotent duplicates; the
+                # scratch segment is never read)
+                pack = np.zeros((rows, 4 + w), np.int32)
+                pack[:, 2] = state.scratch_slab
+                pack[:, 3] = state.scratch_seg
+                pack[:, 4:] = state.scratch_block
                 _, state.pools = jax.block_until_ready(
                     self._decode_paged(self.params, jnp.asarray(pack),
                                        state.pools))
             for w in migrate_cells:
-                # round-trip the scratch block through gather + scatter:
-                # identical content lands back where it came from
+                # round-trip the scratch resources through gather +
+                # scatter: identical content lands back where it came from
                 table = jnp.full((w,), state.scratch_block, jnp.int32)
+                slab = jnp.int32(state.scratch_slab)
+                seg = jnp.int32(state.scratch_seg)
                 packed = jax.block_until_ready(
-                    self._export_kv(state.pools, table))
+                    self._export_kv(state.pools, table, slab, seg))
                 state.pools = jax.block_until_ready(
-                    self._import_kv(state.pools, packed, table))
+                    self._import_kv(state.pools, packed, table, slab, seg))
         else:
             state = self._slots[si]
             if state.cache is None:
@@ -962,9 +1104,12 @@ class ServeEngine:
             _, cache, _ = jax.block_until_ready(
                 self._prefill(self.params, batch))
             if self.paged:
-                table = np.full((self._paged[si].nb_max,),
-                                self._paged[si].scratch_block, np.int32)
-                self._insert_slot_paged(si, cache, 0, table)
+                state = self._paged[si]
+                table = np.full((state.nb_max,), state.scratch_block,
+                                np.int32)
+                self._insert_slot_paged(si, cache, 0, table,
+                                        state.scratch_slab,
+                                        state.scratch_seg)
             else:
                 self._insert_slot(si, 0, cache, 0)
 
@@ -1101,9 +1246,10 @@ class ServeEngine:
         # server's pools with this attempt's (old-server) block table
         server = self.pool.servers[si]
         seq_id = table = None
+        slab = seg = 0
         if self.paged:
-            seq_id, table = self._paged_reserve(si, name, true_len, feeds,
-                                                bucket)
+            seq_id, table, slab, seg = self._paged_reserve(
+                si, name, true_len, feeds, bucket)
         else:
             seq_id = self._kv_reserve(name, prefix[None, :], feeds)
         try:
@@ -1120,7 +1266,7 @@ class ServeEngine:
                 if self.paged:
                     server.submit(
                         lambda: self._insert_slot_paged(
-                            si, cache, src_row, table),
+                            si, cache, src_row, table, slab, seg),
                         priority=prio, name=f"{name}/insert").wait()
                 else:
                     server.submit(
@@ -1161,8 +1307,9 @@ class ServeEngine:
                                 self.pool.cancel_migration(name)
                             else:
                                 try:
-                                    table = self._execute_migration(
-                                        name, seq_id, si, dst, prio)
+                                    table, slab, seg = (
+                                        self._execute_migration(
+                                            name, seq_id, si, dst, prio))
                                 except OutOfBlocksError:
                                     self._release_slot(dst, dst_slot)
                                     self.pool.cancel_migration(name)
@@ -1176,8 +1323,8 @@ class ServeEngine:
                                     run_batch = self._run_paged_decode(si)
                                     self._active_jobs[name] = si
                                     self.pool.complete_migration(name)
-                    payload = ((token, table, length) if self.paged
-                               else (slot, token))
+                    payload = ((token, table, length, slab, seg)
+                               if self.paged else (slot, token))
                     t1 = time.monotonic()
                     req = server.submit_batch(
                         payload, run_batch=run_batch,
@@ -1313,7 +1460,7 @@ class ServeEngine:
         declared = (spec.prefill_ms if spec is not None
                     else task.segments[0].total)
         if self.cost_model is not None:
-            pred = self.cost_model.predict("prefill", 1,
+            pred = self.cost_model.predict(self._prefill_kind, 1,
                                            self.prefill_buckets[-1])
             if math.isfinite(pred):
                 pred_ms = pred * getattr(self.cost_model, "safety", 1.0) * 1e3
@@ -1330,7 +1477,8 @@ class ServeEngine:
         if not self.paged or self.cost_model is None:
             return 0.0
         w = bucket_up(self._paged[0].nb_max, self.width_buckets)
-        pred = self.cost_model.predict("migrate", w, self.kv_block_size)
+        pred = self.cost_model.predict(self._migrate_kind, w,
+                                       self.kv_block_size)
         if not math.isfinite(pred):
             return 0.0
         return 2.0 * pred * getattr(self.cost_model, "safety", 1.0) * 1e3
@@ -1350,9 +1498,10 @@ class ServeEngine:
             return False
         w = self.width_buckets[-1] if self.width_buckets else 0
         c_src = self.cost_model.predict(
-            "decode", bucket_up(depth_src, self._row_buckets), w)
+            self._decode_kind, bucket_up(depth_src, self._row_buckets), w)
         c_dst = self.cost_model.predict(
-            "decode", bucket_up(depth_dst + 1, self._row_buckets), w)
+            self._decode_kind, bucket_up(depth_dst + 1, self._row_buckets),
+            w)
         if not (math.isfinite(c_src) and math.isfinite(c_dst)):
             return depth_src - depth_dst >= 2
         gain_ms = spec.decode_steps * max(0.0, c_src - c_dst) * 1e3
@@ -1514,7 +1663,9 @@ class ServeEngine:
             if self.paged:
                 self._paged.append(_PagedState(
                     self.cfg, self._num_blocks, self.kv_block_size,
-                    self.max_batch, self.max_seq))
+                    self.max_batch, self.max_seq, family=self._family,
+                    num_slabs=self._num_slabs,
+                    num_segments=self._num_segments))
             s = self.pool.servers[si]
             if self._ft_params is not None:
                 s.max_retries = self._ft_params["max_retries"]
@@ -1561,15 +1712,32 @@ class ServeEngine:
             time.sleep(0.005)
         self.pool.retire_server(si)
 
-    def kv_blocks_in_use(self) -> int:
-        """Blocks currently allocated across every KV manager, excluding
-        each paged server's permanently-held scratch block — i.e. the count
-        that must return to zero once all streams drain (the chaos suite's
-        leak check)."""
-        total = self.kv.blocks_in_use if self.kv is not None else 0
+    def kv_usage(self) -> dict:
+        """Per-kind pooled-cache occupancy across every manager —
+        {"blocks", "slabs", "segments"} — excluding each paged server's
+        permanently-held scratch resources.  Every count must return to
+        zero once all streams drain (the per-family leak probe)."""
+        usage = {"blocks": self.kv.blocks_in_use if self.kv is not None
+                 else 0, "slabs": 0, "segments": 0}
         if self.paged:
-            total += sum(st.mgr.blocks_in_use - 1 for st in self._paged)
-        return total
+            for st in self._paged:
+                scratch = st.mgr.seqs.get("__scratch__")
+                sb = len(scratch.blocks) if scratch is not None else 0
+                ss = 1 if scratch is not None and scratch.slab is not None \
+                    else 0
+                sg = (1 if scratch is not None
+                      and scratch.segment is not None else 0)
+                usage["blocks"] += st.mgr.blocks_in_use - sb
+                usage["slabs"] += st.mgr.slabs_in_use - ss
+                usage["segments"] += st.mgr.segments_in_use - sg
+        return usage
+
+    def kv_blocks_in_use(self) -> int:
+        """Total pooled-cache resources (blocks + slabs + segments) held
+        across every manager, scratch excluded — i.e. the count that must
+        return to zero once all streams drain (the chaos suite's leak
+        check; see kv_usage() for the per-kind breakdown)."""
+        return sum(self.kv_usage().values())
 
     def close(self) -> None:
         if self._steal_stop is not None:

@@ -134,6 +134,24 @@ def test_decode_matches_full_forward(arch, built):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_cache_family_resolves(arch):
+    """Every registry entry must resolve to a paged cache family — either
+    declared (cfg.cache_family) or derived (plain GQA stacks only).  A
+    None here would mean the arch silently loses the paged serving path
+    and falls back to dense, which the serving layer forbids."""
+    from repro.serving.kvcache import FAMILIES
+
+    cfg = get_config(arch).reduced()
+    fam = M.cache_family(cfg)
+    assert fam is not None, f"{arch}: no cache family (silent dense fallback)"
+    assert fam in FAMILIES, f"{arch}: unknown family {fam!r}"
+    assert M.supports_paged(cfg), arch
+    # the declaration (when present) is what resolution honors
+    if cfg.cache_family:
+        assert fam == cfg.cache_family
+
+
 @pytest.mark.parametrize("arch", ["llama3_405b", "qwen3_moe_235b_a22b",
                                   "mamba2_780m", "zamba2_7b", "whisper_medium"])
 def test_param_count_matches_init(arch):

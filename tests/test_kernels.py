@@ -10,8 +10,9 @@ import pytest
 from repro.kernels import ref
 from repro.kernels.decode_attention import decode_attention
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels.paged_decode_attention import paged_decode_attention
-from repro.kernels.ssd_scan import ssd_intra
+from repro.kernels.paged_decode_attention import (paged_decode_attention,
+                                                  paged_mla_decode_attention)
+from repro.kernels.ssd_scan import ssd_intra, ssd_slab_decode
 
 
 def _rand(key, shape, dtype):
@@ -170,6 +171,123 @@ class TestPagedDecodeAttention:
                                        interpret=True)
         np.testing.assert_allclose(np.asarray(paged), np.asarray(dense),
                                    rtol=1e-6, atol=1e-6)
+
+
+class TestPagedMLADecodeAttention:
+    """Latent block pools: the absorbed-MLA paged kernel must equal the
+    gathered-view oracle (key = latent‖rope, value = latent)."""
+
+    @staticmethod
+    def _make(key, b, nq, r, pr, nb, bs, w, dtype):
+        ks = jax.random.split(key, 5)
+        q_lat = _rand(ks[0], (b, nq, r), dtype)
+        q_rope = _rand(ks[1], (b, nq, pr), dtype)
+        ckv = _rand(ks[2], (nb, bs, r), dtype)
+        krope = _rand(ks[3], (nb, bs, pr), dtype)
+        perm = jax.random.permutation(ks[4], nb)[: b * w]
+        tables = perm.reshape(b, w).astype(jnp.int32)
+        return q_lat, q_rope, ckv, krope, tables
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("b,nq,r,pr,nb,bs,w", [
+        (2, 4, 32, 8, 16, 16, 4),
+        (1, 8, 64, 16, 12, 32, 3),
+    ])
+    def test_matches_ref(self, b, nq, r, pr, nb, bs, w, dtype):
+        key = jax.random.PRNGKey(21)
+        ql, qr, ckv, krope, tables = self._make(key, b, nq, r, pr, nb, bs, w,
+                                                dtype)
+        lengths = jax.random.randint(jax.random.fold_in(key, 1), (b,), 1,
+                                     w * bs + 1)
+        got = paged_mla_decode_attention(ql, qr, ckv, krope, tables, lengths,
+                                         interpret=True)
+        want = ref.paged_mla_decode_attention_ref(ql, qr, ckv, krope, tables,
+                                                  lengths)
+        np.testing.assert_allclose(np.asarray(got, np.float32),
+                                   np.asarray(want, np.float32), **TOL[dtype])
+
+    def test_short_lengths_skip_blocks(self):
+        b, nq, r, pr, nb, bs, w = 3, 2, 32, 8, 12, 16, 4
+        ql, qr, ckv, krope, tables = self._make(jax.random.PRNGKey(22), b, nq,
+                                                r, pr, nb, bs, w, jnp.float32)
+        lengths = jnp.array([1, 16, 17], jnp.int32)
+        got = paged_mla_decode_attention(ql, qr, ckv, krope, tables, lengths,
+                                         interpret=True)
+        want = ref.paged_mla_decode_attention_ref(ql, qr, ckv, krope, tables,
+                                                  lengths)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+        tables2 = tables.at[0, 1:].set(0).at[1, 1:].set(0)
+        got2 = paged_mla_decode_attention(ql, qr, ckv, krope, tables2, lengths,
+                                          interpret=True)
+        np.testing.assert_array_equal(np.asarray(got[:2]), np.asarray(got2[:2]))
+
+    def test_custom_scale(self):
+        b, nq, r, pr, nb, bs, w = 1, 2, 16, 8, 8, 16, 2
+        ql, qr, ckv, krope, tables = self._make(jax.random.PRNGKey(23), b, nq,
+                                                r, pr, nb, bs, w, jnp.float32)
+        lengths = jnp.array([20], jnp.int32)
+        # MLA scales by the QK head dim (nope+rope), NOT the latent rank
+        got = paged_mla_decode_attention(ql, qr, ckv, krope, tables, lengths,
+                                         scale=24 ** -0.5, interpret=True)
+        want = ref.paged_mla_decode_attention_ref(ql, qr, ckv, krope, tables,
+                                                  lengths, scale=24 ** -0.5)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestSSDSlabDecode:
+    """Slab-pool state gather: one recurrent step addressed through slab
+    ids must equal ssd_decode_step on the gathered states."""
+
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    @pytest.mark.parametrize("b,h,p,n,g,ns", [
+        (2, 4, 16, 24, 1, 8),
+        (3, 4, 32, 16, 2, 6),
+    ])
+    def test_matches_ref(self, b, h, p, n, g, ns, dtype):
+        ks = jax.random.split(jax.random.PRNGKey(31), 6)
+        pool = _rand(ks[0], (ns, h, p, n), jnp.float32)
+        slabs = jax.random.permutation(ks[1], ns)[:b].astype(jnp.int32)
+        x = _rand(ks[2], (b, h, p), dtype)
+        dt = jax.nn.softplus(_rand(ks[3], (b, h), jnp.float32))
+        A = -jnp.abs(_rand(ks[4], (h,), jnp.float32)) * 0.5
+        B = _rand(ks[5], (b, g, n), dtype)
+        C = _rand(jax.random.fold_in(ks[5], 1), (b, g, n), dtype)
+        got_y, got_s = ssd_slab_decode(pool, slabs, x, dt, A, B, C,
+                                       interpret=True)
+        want_y, want_s = ref.ssd_slab_decode_ref(pool, slabs, x, dt, A, B, C)
+        np.testing.assert_allclose(np.asarray(got_y, np.float32),
+                                   np.asarray(want_y, np.float32), **TOL[dtype])
+        np.testing.assert_allclose(np.asarray(got_s), np.asarray(want_s),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_scatter_roundtrip_matches_model_step(self):
+        """pool.at[slabs].set(states) after the kernel equals running
+        models.ssm.ssd_decode_step on the gathered slabs directly."""
+        from repro.models.ssm import ssd_decode_step
+
+        b, h, p, n, ns = 2, 2, 8, 12, 5
+        ks = jax.random.split(jax.random.PRNGKey(32), 6)
+        pool = _rand(ks[0], (ns, h, p, n), jnp.float32)
+        slabs = jnp.array([3, 1], jnp.int32)
+        x = _rand(ks[2], (b, h, p), jnp.float32)
+        dt = jax.nn.softplus(_rand(ks[3], (b, h), jnp.float32))
+        A = -jnp.abs(_rand(ks[4], (h,), jnp.float32)) * 0.5
+        B = _rand(ks[5], (b, 1, n), jnp.float32)
+        C = _rand(jax.random.fold_in(ks[5], 2), (b, 1, n), jnp.float32)
+        y, states = ssd_slab_decode(pool, slabs, x, dt, A, B, C,
+                                    interpret=True)
+        new_pool = pool.at[slabs].set(states)
+        y2, s2 = ssd_decode_step(pool[slabs], x, dt, A, B, C)
+        np.testing.assert_allclose(np.asarray(y), np.asarray(y2),
+                                   rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(np.asarray(new_pool[slabs]),
+                                   np.asarray(s2), rtol=1e-5, atol=1e-5)
+        # untouched slabs stay bit-identical
+        rest = np.setdiff1d(np.arange(ns), np.asarray(slabs))
+        np.testing.assert_array_equal(np.asarray(new_pool[rest]),
+                                      np.asarray(pool[rest]))
 
 
 class TestSSDIntra:

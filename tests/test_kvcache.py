@@ -232,6 +232,134 @@ class TestConcurrentReserveRelease:
         assert len(set(admitted)) == len(admitted)  # unique seq ids
 
 
+class TestSharedSegments:
+    """COW-dedup shared segments (enc-dec cross-attention KV): keyed
+    refcounted acquire/release, fork/free ordering, and concurrent release
+    corner cases."""
+
+    def _mgr(self, segments=3):
+        return PagedKVCacheManager(num_blocks=8, block_size=4,
+                                   num_segments=segments, family="encdec")
+
+    def test_same_key_dedups_to_one_segment(self):
+        m = self._mgr()
+        m.allocate("a", 4, segment_key="frames")
+        m.allocate("b", 4, segment_key="frames")
+        seg = m.segment("a")
+        assert m.segment("b") == seg
+        assert m.segments_in_use == 1
+        assert m.segment_refcount[seg] == 2
+
+    def test_acquire_reports_freshness_exactly_once(self):
+        m = self._mgr()
+        seg, fresh = m.acquire_segment("k")
+        assert fresh  # first caller must write the contents
+        seg2, fresh2 = m.acquire_segment("k")
+        assert seg2 == seg and not fresh2  # joiners must NOT rewrite
+        m.release_segment(seg)
+        m.release_segment(seg)
+        # key retired with the last release: the next acquire is fresh again
+        seg3, fresh3 = m.acquire_segment("k")
+        assert fresh3
+
+    def test_fork_then_free_parent_keeps_segment_live(self):
+        """Fork/free ordering: the parent dying first must not retire the
+        key while the fork still decodes against it."""
+        m = self._mgr()
+        m.allocate("base", 8, segment_key="frames")
+        m.fork("base", "child")
+        seg = m.segment("base")
+        assert m.segment("child") == seg
+        m.free_seq("base")
+        assert m.segments_in_use == 1  # child's reference holds it
+        assert m.segments["frames"] == seg
+        # a latecomer still joins the live key, no fresh allocation
+        m.allocate("late", 4, segment_key="frames")
+        assert m.segment("late") == seg
+        m.free_seq("child")
+        m.free_seq("late")
+        assert m.segments_in_use == 0
+        assert "frames" not in m.segments
+
+    def test_fork_then_free_child_then_parent(self):
+        m = self._mgr()
+        m.allocate("base", 8, segment_key="frames")
+        m.fork("base", "child")
+        m.free_seq("child")
+        seg = m.segment("base")
+        assert m.segment_refcount[seg] == 1
+        m.free_seq("base")
+        assert m.segments_in_use == 0
+
+    def test_last_release_recycles_for_new_key(self):
+        m = self._mgr(segments=1)
+        m.allocate("a", 4, segment_key="k1")
+        with pytest.raises(OutOfBlocksError):
+            m.allocate("b", 4, segment_key="k2")  # pool of 1, k1 holds it
+        m.free_seq("a")
+        m.allocate("b", 4, segment_key="k2")  # recycled under the new key
+        assert m.segments_in_use == 1
+        assert "k1" not in m.segments and "k2" in m.segments
+
+    def test_concurrent_release_frees_exactly_once(self):
+        """Many threads racing release_segment on their own references: the
+        segment must come back exactly once, never double-freed onto the
+        free list."""
+        m = self._mgr(segments=2)
+        n = 16
+        seg, _ = m.acquire_segment("k")
+        for _ in range(n - 1):
+            m.acquire_segment("k")
+        barrier = threading.Barrier(n)
+        errors = []
+
+        def worker():
+            try:
+                barrier.wait()
+                m.release_segment(seg)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker) for _ in range(n)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert m.segment_refcount[seg] == 0
+        assert m.free_segments.count(seg) == 1  # exactly once
+        assert "k" not in m.segments
+
+    def test_concurrent_stream_churn_over_shared_key(self):
+        """Engine-shaped churn: threads allocate/free sequences that all
+        share one segment key; afterwards nothing is held and no segment
+        id appears twice on the free list."""
+        m = self._mgr(segments=2)
+        lock = threading.Lock()  # the engine serializes manager calls
+        errors = []
+
+        def worker(i):
+            try:
+                for j in range(50):
+                    sid = f"t{i}#{j}"
+                    with lock:
+                        m.allocate(sid, 4, segment_key="frames")
+                    with lock:
+                        m.free_seq(sid)
+            except Exception as e:  # noqa: BLE001
+                errors.append(e)
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert not errors
+        assert m.segments_in_use == 0 and m.blocks_in_use == 0
+        assert sorted(m.free_segments) == sorted(set(m.free_segments))
+
+
 class TestGatherSemantics:
     def test_block_table_gather_reconstructs_sequence(self):
         """cache[block_table] must reproduce the logically contiguous KV."""

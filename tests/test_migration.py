@@ -127,6 +127,99 @@ class TestManagerMigration:
         assert len(exp.blocks) == 1  # snapshot taken before the extend
 
 
+FAMILY_POOLS = {  # family -> (num_blocks, num_slabs, num_segments)
+    "gqa": (8, 0, 0),
+    "mla": (8, 0, 0),
+    "ssm": (0, 4, 0),
+    "hybrid": (8, 4, 0),
+    "encdec": (8, 0, 3),
+}
+
+
+def _mgr(family, *, blocks=None, slabs=None, segments=None):
+    nb, ns, ng = FAMILY_POOLS[family]
+    return PagedKVCacheManager(
+        num_blocks=blocks if blocks is not None else nb, block_size=4,
+        num_slabs=slabs if slabs is not None else ns,
+        num_segments=segments if segments is not None else ng,
+        family=family)
+
+
+class TestManagerMigrationAllFamilies:
+    """Satellite: export/import round-trip properties for EVERY cache
+    family — reservation pads preserved, COW siblings untouched, imports
+    all-or-nothing across every pool kind."""
+
+    @pytest.mark.parametrize("family", list(FAMILY_POOLS))
+    def test_roundtrip_preserves_shape_and_drains_clean(self, family):
+        a, b = _mgr(family), _mgr(family)
+        a.allocate("s#0", 6, segment_key="frames")
+        a.extend("s#0", 5)  # reservation padding rides along for block kinds
+        exp = a.export_seq("s#0")
+        new = b.import_seq(exp)
+        assert len(new) == len(exp.blocks)
+        assert b.length("s#0") == a.length("s#0") == 11
+        assert (b.slab("s#0") is not None) == a.family.uses_slab
+        assert (b.segment("s#0") is not None) == a.family.uses_segment
+        if a.family.uses_segment:
+            assert b.seqs["s#0"].segment_key == "frames"
+        a.free_seq("s#0")
+        b.free_seq("s#0")
+        for mgr in (a, b):
+            assert mgr.usage() == {"blocks": 0, "slabs": 0, "segments": 0}
+
+    @pytest.mark.parametrize("family", ["gqa", "mla", "hybrid", "encdec"])
+    def test_cow_sibling_untouched_by_migration(self, family):
+        a, b = _mgr(family), _mgr(family)
+        a.allocate("base#0", 8, segment_key="frames")
+        a.fork("base#0", "fork#0")
+        shared = list(a.seqs["base#0"].blocks)
+        assert all(a.refcount[blk] == 2 for blk in shared)
+        b.import_seq(a.export_seq("fork#0"))
+        a.free_seq("fork#0")  # commit: source side of the fork only
+        assert all(a.refcount[blk] == 1 for blk in shared)
+        assert a.seqs["base#0"].blocks == shared
+        b.extend("fork#0", 4)
+        assert a.length("base#0") == 8
+
+    def test_slab_import_gets_fresh_slab(self):
+        a, b = _mgr("ssm"), _mgr("ssm")
+        a.allocate("s#0", 6)
+        b.allocate("other#0", 3)  # occupies a slab on the destination
+        taken = b.slab("other#0")
+        b.import_seq(a.export_seq("s#0"))
+        assert b.slab("s#0") is not None and b.slab("s#0") != taken
+        # the source slab stays live until the engine's commit free
+        assert a.slab("s#0") is not None
+
+    def test_segment_import_joins_resident_key(self):
+        a, b = _mgr("encdec"), _mgr("encdec")
+        a.allocate("s#0", 4, segment_key="frames")
+        b.allocate("t#0", 4, segment_key="frames")
+        seg = b.segment("t#0")
+        b.import_seq(a.export_seq("s#0"))
+        assert b.segment("s#0") == seg  # joined, not re-allocated
+        assert b.segment_refcount[seg] == 2
+        b.free_seq("t#0")
+        assert b.segment_refcount[seg] == 1  # mover still holds it
+        b.free_seq("s#0")
+        assert b.segments_in_use == 0
+
+    @pytest.mark.parametrize("family,short", [
+        ("gqa", dict(blocks=2)),
+        ("ssm", dict(slabs=0)),
+        ("hybrid", dict(slabs=0)),
+        ("encdec", dict(segments=0)),
+    ])
+    def test_import_exhaustion_all_or_nothing_per_kind(self, family, short):
+        a, b = _mgr(family), _mgr(family, **short)
+        a.allocate("s#0", 12, segment_key="frames")
+        before = b.usage()
+        with pytest.raises(OutOfBlocksError):
+            b.import_seq(a.export_seq("s#0"))
+        assert b.usage() == before and "s#0" not in b.seqs
+
+
 # -------------------------------------------------------------------------
 # engine end-to-end
 # -------------------------------------------------------------------------
@@ -284,7 +377,7 @@ class TestEngineMigration:
         eng = _engine(cfg, params)
         try:
             assert eng.admit(_spec("s0", 1)).admitted
-            seq_id, _ = eng._paged_reserve(0, "s0", 4, STEPS, 8)
+            seq_id, _, _, _ = eng._paged_reserve(0, "s0", 4, STEPS, 8)
             assert eng.kv_blocks_in_use() > 0
             src = eng._paged[0]
             src.pools = M.init_paged_cache(cfg, src.mgr.num_blocks,
@@ -292,8 +385,8 @@ class TestEngineMigration:
             real_export = eng._export_kv
             fired = []
 
-            def export_and_remove(pools, table):
-                packed = real_export(pools, table)
+            def export_and_remove(pools, table, slab, seg):
+                packed = real_export(pools, table, slab, seg)
                 if not fired:
                     fired.append(True)
                     eng.remove("s0")  # lands mid-copy, before commit
@@ -316,7 +409,7 @@ class TestEngineMigration:
         eng = _engine(cfg, params)
         try:
             assert eng.admit(_spec("s0", 1)).admitted
-            seq_id, _ = eng._paged_reserve(0, "s0", 4, STEPS, 8)
+            seq_id, _, _, _ = eng._paged_reserve(0, "s0", 4, STEPS, 8)
             src = eng._paged[0]
             src.pools = M.init_paged_cache(cfg, src.mgr.num_blocks,
                                            src.mgr.block_size)

@@ -106,8 +106,124 @@ class TestPagedDecodeMatchesDense:
             assert not np.array_equal(np.asarray(leaf[:, 3, 1]),
                                       np.asarray(old[:, 3, 1]))
 
-    def test_unsupported_families_raise(self):
-        cfg = get_config("deepseek_v2_lite_16b").reduced()  # MLA
-        assert not M.supports_paged(cfg)
-        with pytest.raises(NotImplementedError):
-            M.init_paged_cache(cfg, num_blocks=4, block_size=8)
+    def test_undeclared_families_raise(self):
+        """Stripping the declared cache_family must kill the paged path —
+        there is NO silent dense fallback for non-GQA stacks."""
+        import dataclasses
+
+        for arch in ("deepseek_v2_lite_16b", "mamba2_780m", "zamba2_7b",
+                     "whisper_medium"):
+            cfg = dataclasses.replace(get_config(arch).reduced(),
+                                      cache_family="")
+            assert M.cache_family(cfg) is None
+            assert not M.supports_paged(cfg)
+            with pytest.raises(NotImplementedError):
+                M.init_paged_cache(cfg, num_blocks=4, block_size=8)
+
+
+# --------------------------------------------------------------------------
+# every cache family: paged greedy decode == dense greedy decode
+# --------------------------------------------------------------------------
+
+
+def _stage(cfg, pools, views, *, blocks, block_size, slab, seg):
+    """Generic per-kind scatter of a 1-row prefill cache into the pools —
+    the same staging the serving engine performs, family-agnostic."""
+    kinds = M.paged_pool_kinds(cfg)
+    tbl = jnp.asarray(blocks, jnp.int32)
+    n = len(blocks)
+
+    def block_scatter(pool, leaf):
+        rows = leaf[:, 0, : n * block_size]
+        rows = rows.reshape(leaf.shape[0], n, block_size, *leaf.shape[3:])
+        return pool.at[:, tbl].set(rows.astype(pool.dtype))
+
+    def row_scatter(idx):
+        def f(pool, leaf):
+            return pool.at[:, idx].set(leaf[:, 0].astype(pool.dtype))
+        return f
+
+    out = {}
+    for key, kind in kinds.items():
+        f = block_scatter if kind == "block" else row_scatter(
+            slab if kind == "slab" else seg)
+        out[key] = jax.tree.map(f, pools[key], views[key])
+    return out
+
+
+def _decode_cache(cfg, pools, *, length, tables, slab, seg):
+    kinds = set(M.paged_pool_kinds(cfg).values())
+    cache = dict(pools)
+    cache["pos"] = jnp.asarray([length], jnp.int32)
+    if "block" in kinds:
+        cache["block_tables"] = tables
+    if "slab" in kinds:
+        cache["slab_ids"] = jnp.asarray([slab], jnp.int32)
+    if "segment" in kinds:
+        cache["segment_ids"] = jnp.asarray([seg], jnp.int32)
+    return cache
+
+
+class TestPagedFamiliesMatchDense:
+    """The tentpole bar: for EVERY cache family, greedy decode through the
+    pooled layout must produce the same tokens as the dense masked path."""
+
+    @pytest.mark.parametrize("arch,family", [
+        ("internlm2_1_8b", "gqa"),
+        ("deepseek_v2_lite_16b", "mla"),
+        ("mamba2_780m", "ssm"),
+        ("zamba2_7b", "hybrid"),
+        ("whisper_medium", "encdec"),
+    ])
+    def test_greedy_tokens_identical(self, arch, family):
+        cfg = get_config(arch).reduced()
+        assert M.cache_family(cfg) == family
+        assert M.supports_paged(cfg)
+        params = M.init_params(cfg, jax.random.PRNGKey(42))
+        prompt_len, steps, max_seq = 5, 6, 32
+        prompt = np.arange(1, prompt_len + 1, dtype=np.int32)[None, :] % 100
+
+        batch = {"tokens": jnp.asarray(prompt), "max_seq": max_seq}
+        if cfg.family == "encdec":
+            frames = jax.random.normal(
+                jax.random.PRNGKey(7), (1, cfg.encoder_seq, cfg.d_model),
+                jnp.float32) * 0.1
+            batch["frames"] = frames.astype(jnp.dtype(cfg.dtype))
+
+        # dense masked path
+        logits, dcache, _ = M.apply(cfg, params, batch, mode="prefill")
+        tok0 = int(jnp.argmax(logits[0, -1]))
+        dense_tokens = [tok0]
+        for _ in range(steps):
+            logits, dcache, _ = M.apply(
+                cfg, params,
+                {"tokens": jnp.full((1, 1), dense_tokens[-1], jnp.int32)},
+                mode="decode", cache=dcache)
+            dense_tokens.append(int(jnp.argmax(logits[0, -1])))
+
+        # paged path: same prefill staged into the pools
+        need = -(-(prompt_len + steps) // BLOCK)
+        pools = M.init_paged_cache(cfg, num_blocks=need + 3, block_size=BLOCK,
+                                   num_slabs=4, num_segments=2)
+        _, row_cache, _ = M.apply(cfg, params, batch, mode="prefill")
+        views = M.paged_insert_views(cfg, row_cache)
+        blocks = list(range(2, 2 + need))  # deliberately not block 0
+        slab, seg = 2, 1                   # deliberately not slot 0
+        pools = _stage(cfg, pools, views, blocks=blocks, block_size=BLOCK,
+                       slab=slab, seg=seg)
+        tables = jnp.asarray([blocks], jnp.int32)
+        kinds = M.paged_pool_kinds(cfg)
+        length = prompt_len
+        paged_tokens = [tok0]
+        for _ in range(steps):
+            cache = _decode_cache(cfg, pools, length=length, tables=tables,
+                                  slab=slab, seg=seg)
+            logits, cache, _ = M.apply(
+                cfg, params,
+                {"tokens": jnp.full((1, 1), paged_tokens[-1], jnp.int32)},
+                mode="decode", cache=cache)
+            pools = {k: cache[k] for k in kinds}
+            length += 1
+            paged_tokens.append(int(jnp.argmax(logits[0, -1])))
+
+        assert paged_tokens == dense_tokens

@@ -351,10 +351,15 @@ class TestPagedPoolServing:
         finally:
             eng.close()
 
-    def test_paged_requires_supported_family(self):
+    def test_paged_requires_declared_family(self):
+        """A stack whose cache_family declaration is stripped has NO paged
+        path — the engine must refuse, never silently fall back to dense."""
+        import dataclasses
+
         from repro.configs.registry import get_config as gc
 
-        cfg = gc("deepseek_v2_lite_16b").reduced()  # MLA: no paged path yet
+        cfg = dataclasses.replace(gc("deepseek_v2_lite_16b").reduced(),
+                                  cache_family="")
         params = M.init_params(cfg, jax.random.PRNGKey(2))
         with pytest.raises(ValueError, match="paged decode unsupported"):
             ServeEngine(cfg, params, max_seq=32, batching=True, paged=True)
